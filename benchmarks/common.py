@@ -1,0 +1,186 @@
+"""Shared benchmark scaffolding: datasets, query suites, the four
+competing systems, timing."""
+from __future__ import annotations
+
+import sys
+import os
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.engine import VDMSAsyncEngine
+from repro.core.entity import Entity
+from repro.core.executors import FrameExecutor, PooledExecutor, SyncExecutor
+from repro.core.pipeline import make_op, parse_operations
+from repro.core.remote import RemoteServerPool, TransportModel
+from repro.dataio import synthetic_faces, synthetic_video
+
+# calibrated transport: ~LAN latency + a remote-compute component per
+# entity; identical across all competing systems (DESIGN.md section 5)
+# service_time models the remote server's compute for the paper's
+# compute-intensive UDFs (face detection on their CPUs: tens of ms/image);
+# the sleep releases the GIL so cross-entity overlap is genuine.
+TRANSPORT = TransportModel(network_latency_s=0.008, bandwidth_bytes_s=1e9,
+                           service_time_s=0.010)
+
+# ---------------------------------------------------------------- data
+_IMG_CACHE = {}
+
+
+def image_set(n=48, size=64):
+    key = (n, size)
+    if key not in _IMG_CACHE:
+        _IMG_CACHE[key] = synthetic_faces(n, size=size, seed=1)
+    return _IMG_CACHE[key]
+
+
+def video_set(n=6, frames=8, size=48):
+    key = ("v", n, frames, size)
+    if key not in _IMG_CACHE:
+        _IMG_CACHE[key] = np.stack([synthetic_video(frames, size, seed=i)
+                                    for i in range(n)])
+    return _IMG_CACHE[key]
+
+
+# -------------------------------------------------------------- queries
+def image_queries() -> dict[str, list[dict]]:
+    """IQ1–IQ9 (paper section 6.1.2); remote/UDF per the paper's default."""
+    R = lambda name, **opt: {"type": "remote", "url": "http://srv/op",
+                             "options": {"id": name, **opt}}
+    return {
+        "IQ1_crop": [R("crop", x=4, y=4, width=32, height=32)],
+        "IQ2_grayscale": [R("grayscale")],
+        "IQ3_blur": [R("blur", ksize=5, sigma_x=1.5)],
+        "IQ4_box": [R("facedetect_box")],
+        "IQ5_mask": [R("facedetect_mask", r=12)],
+        "IQ6_upsample": [R("upsample", fx=1.5, fy=1.5)],
+        "IQ7_downsample": [R("downsample", fx=2.0, fy=2.0)],
+        "IQ8_caption": [R("caption", text="LFW", x=2, y=2)],
+        "IQ9_manipulation": [R("manipulation")],
+    }
+
+
+def video_queries() -> dict[str, list[dict]]:
+    R = lambda name, **opt: {"type": "remote", "url": "http://srv/op",
+                             "options": {"id": name, **opt}}
+    return {
+        "VQ1_select": [R("crop", x=2, y=2, width=32, height=32)],
+        "VQ2_grayscale": [R("grayscale")],
+        "VQ3_blur": [R("blur", ksize=5, sigma_x=1.5)],
+        "VQ4_box": [R("facedetect_box")],
+        "VQ5_mask": [R("facedetect_mask", r=10)],
+        "VQ6_upsample": [R("upsample", fx=1.5, fy=1.5)],
+        "VQ7_downsample": [R("downsample", fx=2.0, fy=2.0)],
+        "VQ8_activity": [R("activityrecognition")],
+        "VQ9_manipulation": [R("manipulation")],
+    }
+
+
+def image_c2_pipeline() -> list[dict]:
+    """Resize -> Box -> Manipulation -> Rotate (Resize/Rotate native)."""
+    return [
+        {"type": "resize", "width": 48, "height": 48},
+        {"type": "remote", "url": "u", "options": {"id": "facedetect_box"}},
+        {"type": "remote", "url": "u", "options": {"id": "manipulation"}},
+        {"type": "rotate", "k": 1},
+    ]
+
+
+def video_c2_pipeline() -> list[dict]:
+    """ActivityRecognition -> Resize -> Select -> Manipulation."""
+    return [
+        {"type": "remote", "url": "u", "options": {"id": "activityrecognition"}},
+        {"type": "resize", "width": 40, "height": 40},
+        {"type": "crop", "x": 2, "y": 2, "width": 32, "height": 32},
+        {"type": "remote", "url": "u", "options": {"id": "manipulation"}},
+    ]
+
+
+# -------------------------------------------------------------- systems
+def run_async_engine(data, ops_json, *, servers=2, clients=1, video=False,
+                     fuse=False, batch_remote=1, transport=None) -> dict:
+    eng = VDMSAsyncEngine(num_remote_servers=servers,
+                          transport=transport or TRANSPORT,
+                          fuse_native=fuse, batch_remote=batch_remote)
+    try:
+        kind = "video" if video else "image"
+        for i, item in enumerate(data):
+            eng.add_entity(kind, item, {"category": "bench", "idx": i})
+        verb = "FindVideo" if video else "FindImage"
+        q = [{verb: {"constraints": {"category": ["==", "bench"]},
+                     "operations": ops_json}}]
+        eng.execute(q, timeout=600)  # warmup (jit compile)
+        t0 = time.monotonic()
+        m0 = time.monotonic()
+        if clients == 1:
+            res = eng.execute(q, timeout=600)
+            assert res["stats"]["failed"] == 0
+        else:
+            import threading
+            errs = []
+
+            def client():
+                try:
+                    r = eng.execute(q, timeout=600)
+                    assert r["stats"]["failed"] == 0
+                except Exception as e:  # noqa: BLE001
+                    errs.append(e)
+            ts = [threading.Thread(target=client) for _ in range(clients)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            assert not errs, errs
+        dt = time.monotonic() - t0
+        util = eng.utilization()
+        util["thread2_busy_s"] = eng.loop.t2_meter.busy_seconds(since=m0)
+        util["thread3_busy_s"] = eng.loop.t3_meter.busy_seconds(since=m0)
+        util["wall_s"] = dt
+        return util
+    finally:
+        eng.shutdown()
+
+
+def run_baseline(system: str, data, ops_json, *, servers=2, clients=1,
+                 video=False, workers=8, transport=None) -> dict:
+    pool = RemoteServerPool(servers, transport or TRANSPORT)
+    ops = parse_operations(ops_json)
+    kind = "video" if video else "image"
+    try:
+        def make_ents():
+            return [Entity(str(i), kind, np.array(d), ops=list(ops))
+                    for i, d in enumerate(data)]
+
+        cls = {"sync": SyncExecutor, "pool": PooledExecutor,
+               "frame": FrameExecutor}[system]
+        ex = cls(pool) if system == "sync" else cls(pool, workers=workers)
+        ex.run(make_ents())  # warmup
+        t0 = time.monotonic()
+        m0 = time.monotonic()
+        if clients == 1:
+            ex.run(make_ents())
+        else:
+            import threading
+            ts = [threading.Thread(target=lambda: ex.run(make_ents()))
+                  for _ in range(clients)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+        return {"wall_s": time.monotonic() - t0,
+                "busy_s": ex.meter.busy_seconds(since=m0)}
+    finally:
+        pool.shutdown()
+
+
+# C3 multi-client runs: remote capacity is SIMULATED (execute_ops=False)
+# so kappa "servers" genuinely serve in parallel despite this container's
+# single core — isolating the execution-architecture effect the paper
+# measures (its remote servers are separate machines).  Correctness of
+# remote ops is asserted by C1/C2 and the test suite, which execute them
+# for real.
+SIM_TRANSPORT = TransportModel(network_latency_s=0.008,
+                               bandwidth_bytes_s=1e9,
+                               service_time_s=0.012, execute_ops=False)

@@ -1,0 +1,70 @@
+"""Image benchmarks: C1 (Figs 9-11), C2 (Figs 12-14), C3 (Figs 15-17).
+
+Each row: name,us_per_call,derived — us_per_call is query wall time per
+entity; derived is the speedup of VDMS-Async over the sync VDMS baseline.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (SIM_TRANSPORT, image_c2_pipeline,
+                               image_queries, image_set, run_async_engine,
+                               run_baseline)
+
+
+def run_c1(n_images=32, queries=None, servers=2):
+    data = image_set(n_images)
+    rows = []
+    for name, ops in (queries or image_queries()).items():
+        t_sync = run_baseline("sync", data, ops, servers=servers)["wall_s"]
+        t_pool = run_baseline("pool", data, ops, servers=servers)["wall_s"]
+        a = run_async_engine(data, ops, servers=servers)
+        rows.append({
+            "name": f"image_c1_{name}",
+            "us_per_call": a["wall_s"] / n_images * 1e6,
+            "derived": t_sync / a["wall_s"],
+            "sync_s": t_sync, "pool_s": t_pool, "async_s": a["wall_s"],
+            "throughput_eps": n_images / a["wall_s"],
+        })
+    return rows
+
+
+def run_c2(n_images=32, servers=2, fuse=False, batch_remote=1):
+    data = image_set(n_images)
+    ops = image_c2_pipeline()
+    t_sync = run_baseline("sync", data, ops, servers=servers)["wall_s"]
+    t_pool = run_baseline("pool", data, ops, servers=servers)["wall_s"]
+    a = run_async_engine(data, ops, servers=servers, fuse=fuse,
+                         batch_remote=batch_remote)
+    tag = "" if not (fuse or batch_remote > 1) else "_opt"
+    return [{
+        "name": f"image_c2_pipeline{tag}",
+        "us_per_call": a["wall_s"] / n_images * 1e6,
+        "derived": t_sync / a["wall_s"],
+        "sync_s": t_sync, "pool_s": t_pool, "async_s": a["wall_s"],
+        "throughput_eps": n_images / a["wall_s"],
+        "t2_busy": a["thread2_busy_s"], "t3_busy": a["thread3_busy_s"],
+    }]
+
+
+def run_c3(n_images=16, clients=(2, 4, 8), servers=4):
+    data = image_set(n_images)
+    ops = image_c2_pipeline()
+    rows = []
+    for c in clients:
+        t_sync = run_baseline("sync", data, ops, servers=servers,
+                              clients=c, transport=SIM_TRANSPORT)["wall_s"]
+        t_pool = run_baseline("pool", data, ops, servers=servers,
+                              clients=c, transport=SIM_TRANSPORT)["wall_s"]
+        a = run_async_engine(data, ops, servers=servers, clients=c,
+                             transport=SIM_TRANSPORT)
+        a_opt = run_async_engine(data, ops, servers=servers, clients=c,
+                                 transport=SIM_TRANSPORT, fuse=True,
+                                 batch_remote=8)
+        rows.append({
+            "name": f"image_c3_{c}clients",
+            "us_per_call": a["wall_s"] / (n_images * c) * 1e6,
+            "derived": t_sync / a["wall_s"],
+            "sync_s": t_sync, "pool_s": t_pool, "async_s": a["wall_s"],
+            "async_opt_s": a_opt["wall_s"],
+            "opt_speedup": t_sync / a_opt["wall_s"],
+        })
+    return rows

@@ -1,0 +1,83 @@
+"""Emit the EXPERIMENTS.md roofline tables from the dry-run JSONs.
+
+  PYTHONPATH=src python -m benchmarks.report --dryrun experiments/dryrun_final
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.roofline import analytic_cell, load_dryrun
+from repro.configs import SHAPES, get_arch
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x >= 1:
+        return f"{x:.1f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def table(dryrun_dir: str, mesh: str) -> str:
+    recs = load_dryrun(dryrun_dir)
+    lines = [
+        "| arch | shape | GiB/dev | parsed C/M/N (s) | parsed bound "
+        "| adj C/M/N (s) | adj bound | roofline frac | useful ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = []
+    from repro.configs import ALL_ARCHS
+    for a in ALL_ARCHS:
+        for s in SHAPES:
+            if (a, s, mesh) in recs:
+                order.append((a, s))
+    for a, s in order:
+        r = recs[(a, s, mesh)]
+        if r["status"] == "skipped":
+            lines.append(f"| {a} | {s} | — | — | — | — | — | skipped: "
+                         f"{r['reason'][:60]} | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {a} | {s} | — | ERROR {r.get('error','')[:50]} "
+                         f"| — | — | — | — | — |")
+            continue
+        cfg = get_arch(a)
+        ana = analytic_cell(cfg, SHAPES[s], pod=2 if mesh.startswith("2x") else 1)
+        lines.append(
+            f"| {a} | {s} | {r['input_bytes_per_device']/2**30:.2f} "
+            f"| {fmt_s(r['compute_term_s'])} / {fmt_s(r['memory_term_s'])} / "
+            f"{fmt_s(r['collective_term_s'])} | {r['bottleneck']} "
+            f"| {fmt_s(ana['compute_s'])} / {fmt_s(ana['memory_s'])} / "
+            f"{fmt_s(ana['collective_s'])} | {ana['bottleneck']} "
+            f"| {ana['roofline_fraction']:.2f} | {ana['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def summary(dryrun_dir: str) -> str:
+    recs = load_dryrun(dryrun_dir)
+    out = []
+    for mesh in ("16x16", "2x16x16"):
+        rows = [r for (a, s, m), r in recs.items() if m == mesh]
+        ok = sum(r["status"] == "ok" for r in rows)
+        sk = sum(r["status"] == "skipped" for r in rows)
+        er = sum(r["status"] == "error" for r in rows)
+        comp = [r.get("compile_s", 0) for r in rows if r["status"] == "ok"]
+        out.append(f"- **{mesh}**: {ok} compiled OK, {sk} skipped-by-design, "
+                   f"{er} errors; compile time med/max "
+                   f"{sorted(comp)[len(comp)//2]:.1f}/{max(comp):.1f}s")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="experiments/dryrun_final")
+    ap.add_argument("--mesh", default="16x16")
+    a = ap.parse_args()
+    print(summary(a.dryrun))
+    print()
+    print(table(a.dryrun, a.mesh))

@@ -1,0 +1,59 @@
+"""Scale-out with kappa remote servers (paper Fig 29): T(1)/T(kappa)
+should grow linearly in kappa.
+
+The workload is IQ4 (face detect) under many parallel clients; the
+remote-server capacity model dominates (service-time limited), matching
+the paper's setup where the remote servers are the bottleneck resource.
+derived = efficiency of the linear scaling: (T(1)/T(k)) / k.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import TRANSPORT, image_set, run_async_engine
+from repro.core.remote import TransportModel
+
+SCALE_TRANSPORT = TransportModel(network_latency_s=0.0005,
+                                 bandwidth_bytes_s=5e9,
+                                 service_time_s=0.02)   # remote-bound
+
+
+def run(kappas=(1, 2, 4, 8, 16, 32, 64), n_images=96, clients=4):
+    from repro.core.engine import VDMSAsyncEngine
+
+    data = image_set(n_images, size=48)
+    ops = [{"type": "remote", "url": "u", "options": {"id": "facedetect_box"}}]
+    times = {}
+    for k in kappas:
+        eng = VDMSAsyncEngine(num_remote_servers=k, transport=SCALE_TRANSPORT,
+                              dispatch_policy="least_loaded")
+        try:
+            for i, img in enumerate(data):
+                eng.add_entity("image", img, {"category": "s", "idx": i})
+            q = [{"FindImage": {"constraints": {"category": ["==", "s"]},
+                                "operations": ops}}]
+            eng.execute(q, timeout=600)  # warmup/compile
+            import threading
+            t0 = time.monotonic()
+            ts = [threading.Thread(target=lambda: eng.execute(q, timeout=600))
+                  for _ in range(clients)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            times[k] = time.monotonic() - t0
+        finally:
+            eng.shutdown()
+    rows = []
+    t1 = times[kappas[0]]
+    for k in kappas:
+        gain = t1 / times[k]
+        rows.append({
+            "name": f"scaleout_k{k}",
+            "us_per_call": times[k] / (n_images * clients) * 1e6,
+            "derived": gain / k,       # linear-scaling efficiency
+            "gain": gain, "wall_s": times[k],
+        })
+    return rows

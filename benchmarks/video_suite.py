@@ -1,0 +1,60 @@
+"""Video benchmarks: C1 (Figs 18-20), C2 (Figs 21-23), C3 (Figs 24-26);
+includes the Scanner-style frame-graph baseline."""
+from __future__ import annotations
+
+from benchmarks.common import (SIM_TRANSPORT, run_async_engine, run_baseline,
+                               video_c2_pipeline, video_queries, video_set)
+
+
+def run_c1(n_videos=4, frames=6, queries=None, servers=2):
+    data = video_set(n_videos, frames=frames)
+    rows = []
+    for name, ops in (queries or video_queries()).items():
+        t_sync = run_baseline("sync", data, ops, servers=servers,
+                              video=True)["wall_s"]
+        t_frame = run_baseline("frame", data, ops, servers=servers,
+                               video=True)["wall_s"]
+        a = run_async_engine(data, ops, servers=servers, video=True)
+        n_frames = n_videos * frames
+        rows.append({
+            "name": f"video_c1_{name}",
+            "us_per_call": a["wall_s"] / n_videos * 1e6,
+            "derived": t_sync / a["wall_s"],
+            "sync_s": t_sync, "scanner_s": t_frame, "async_s": a["wall_s"],
+            "frames_per_s": n_frames / a["wall_s"],
+        })
+    return rows
+
+
+def run_c2(n_videos=4, frames=6, servers=2):
+    data = video_set(n_videos, frames=frames)
+    ops = video_c2_pipeline()
+    t_sync = run_baseline("sync", data, ops, servers=servers, video=True)["wall_s"]
+    t_pool = run_baseline("pool", data, ops, servers=servers, video=True)["wall_s"]
+    t_frame = run_baseline("frame", data, ops, servers=servers, video=True)["wall_s"]
+    a = run_async_engine(data, ops, servers=servers, video=True)
+    return [{
+        "name": "video_c2_pipeline",
+        "us_per_call": a["wall_s"] / n_videos * 1e6,
+        "derived": t_sync / a["wall_s"],
+        "sync_s": t_sync, "pool_s": t_pool, "scanner_s": t_frame,
+        "async_s": a["wall_s"],
+    }]
+
+
+def run_c3(n_videos=3, frames=4, clients=(2, 4), servers=4):
+    data = video_set(n_videos, frames=frames)
+    ops = video_c2_pipeline()
+    rows = []
+    for c in clients:
+        t_sync = run_baseline("sync", data, ops, servers=servers, video=True,
+                              clients=c, transport=SIM_TRANSPORT)["wall_s"]
+        a = run_async_engine(data, ops, servers=servers, video=True, clients=c,
+                             transport=SIM_TRANSPORT)
+        rows.append({
+            "name": f"video_c3_{c}clients",
+            "us_per_call": a["wall_s"] / (n_videos * c) * 1e6,
+            "derived": t_sync / a["wall_s"],
+            "sync_s": t_sync, "async_s": a["wall_s"],
+        })
+    return rows

@@ -1,0 +1,25 @@
+"""Scale-out demo (paper Fig 29): query latency vs number of remote
+servers kappa — the event-driven engine converts added servers into
+near-linear speedup.
+
+  PYTHONPATH=src python examples/scaleout_bench.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.scaleout import run
+
+
+def main():
+    rows = run(kappas=(1, 2, 4, 8, 16, 32), n_images=64, clients=4)
+    print(f"{'kappa':>6s} {'wall_s':>8s} {'gain T(1)/T(k)':>15s} {'efficiency':>11s}")
+    for r in rows:
+        k = int(r["name"].split("_k")[1])
+        print(f"{k:6d} {r['wall_s']:8.3f} {r['gain']:15.2f} {r['derived']:11.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""The paper's contribution: VDMS-Async — an event-driven, asynchronous
+visual-query execution engine with user-defined and remote operations.
+
+Faithful structure (paper section 5): Thread_1 (repro.core.engine) filters
+entities and enqueues pointers on Queue_1; the event loop
+(repro.core.event_loop) runs Thread_2 (native ops) and Thread_3
+(remote/UDF dispatch + response callbacks) over Queue_1/Queue_2 with the
+Entity Response Dictionary updated after every operation.  Baseline
+executors (sync VDMS, PostgreSQL-style pool, Scanner-style frame graph)
+live in repro.core.executors.
+"""
+from repro.core.entity import Entity, ERD  # noqa: F401
+from repro.core.pipeline import Operation, make_op, parse_operations  # noqa: F401

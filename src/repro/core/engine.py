@@ -1,0 +1,150 @@
+"""VDMS-Async engine: the main thread (Thread_1, paper section 5.1.1).
+
+Receives queries, filters entities against the metadata store, attaches
+the operation pipeline to each entity object, enqueues *pointers* onto
+the event loop's Queue_1, waits for the loop to drain, then assembles
+the response from the ERD.
+
+Supports many concurrent client queries (experiment C3): each query gets
+a completion latch; the shared event loop interleaves entities from all
+active queries.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core.entity import ERD, Entity
+from repro.core.event_loop import EventLoop
+from repro.core.pipeline import Operation
+from repro.core.remote import RemoteServerPool, TransportModel
+from repro.query.language import Command, parse_query
+from repro.query.metadata import MetadataStore
+from repro.storage.store import BlobStore
+
+
+class _Latch:
+    def __init__(self, n: int):
+        self._n = n
+        self._cv = threading.Condition()
+
+    def count_down(self):
+        with self._cv:
+            self._n -= 1
+            if self._n <= 0:
+                self._cv.notify_all()
+
+    def wait(self, timeout=None) -> bool:
+        with self._cv:
+            return self._cv.wait_for(lambda: self._n <= 0, timeout)
+
+
+class VDMSAsyncEngine:
+    def __init__(self, *, num_remote_servers: int = 1,
+                 transport: TransportModel | None = None,
+                 fuse_native: bool = False,
+                 batch_remote: int = 1,
+                 dispatch_policy: str = "round_robin"):
+        self.meta = MetadataStore()
+        self.store = BlobStore()
+        self.erd = ERD()
+        self.pool = RemoteServerPool(num_remote_servers, transport,
+                                     policy=dispatch_policy)
+        self._latches: dict[str, _Latch] = {}
+        self._latch_lock = threading.Lock()
+        self.loop = EventLoop(self.pool, self.erd,
+                              fuse_native=fuse_native,
+                              batch_remote=batch_remote,
+                              on_entity_done=self._entity_done)
+        self._qid = itertools.count()
+
+    # ------------------------------------------------------------ ingest
+    def add_entity(self, kind: str, data, properties: dict) -> str:
+        eid = self.meta.add(kind, properties)
+        self.store.put(eid, np.asarray(data))
+        return eid
+
+    # ------------------------------------------------------------- query
+    def execute(self, query: list[dict] | dict, timeout: float | None = None) -> dict:
+        """Run a VDMS JSON query; returns {"entities": {eid: array},
+        "stats": {...}}.  Blocks until the pipeline drains (the client-
+        facing call is synchronous, like VDMS; internally everything is
+        event-driven)."""
+        cmds = parse_query(query)
+        t0 = time.monotonic()
+        results: dict[str, Any] = {}
+        stats = {"matched": 0, "failed": 0}
+        for cmd in cmds:
+            if cmd.verb == "add":
+                eid = self.add_entity(cmd.kind, cmd.data, cmd.properties)
+                ents = [self._make_entity(eid, cmd, str(next(self._qid)))]
+                if cmd.operations:
+                    self._run_entities(ents, timeout)
+                    self.store.put(eid, np.asarray(ents[0].data))
+                results[eid] = ents[0].data
+            else:
+                qid = str(next(self._qid))
+                eids = self.meta.find(cmd.kind, cmd.constraints)
+                if cmd.limit:
+                    eids = eids[: cmd.limit]
+                stats["matched"] += len(eids)
+                ents = [self._make_entity(eid, cmd, qid) for eid in eids]
+                self._run_entities(ents, timeout)
+                for e in ents:
+                    if e.failed:
+                        stats["failed"] += 1
+                    results[e.eid] = e.data
+        stats["duration_s"] = time.monotonic() - t0
+        return {"entities": results, "stats": stats}
+
+    # --------------------------------------------------------- internals
+    def _make_entity(self, eid: str, cmd: Command, qid: str) -> Entity:
+        return Entity(eid=eid, kind=cmd.kind, data=self.store.get(eid),
+                      metadata=self.meta.get(eid), ops=list(cmd.operations),
+                      query_id=qid)
+
+    def _run_entities(self, ents: list[Entity], timeout=None):
+        if not ents:
+            return
+        qid = ents[0].query_id
+        latch = _Latch(len(ents))
+        with self._latch_lock:
+            self._latches[qid] = latch
+        # Thread_1 enqueues pointers one by one; Thread_2 starts work on the
+        # head entity while the rest are still being enqueued.
+        for e in ents:
+            self.erd.update(e, "enqueued")
+            self.loop.enqueue(e)
+        ok = latch.wait(timeout)
+        with self._latch_lock:
+            self._latches.pop(qid, None)
+        if not ok:
+            raise TimeoutError(f"query {qid} timed out")
+
+    def _entity_done(self, ent: Entity):
+        with self._latch_lock:
+            latch = self._latches.get(ent.query_id)
+        if latch:
+            latch.count_down()
+
+    # -------------------------------------------------------- operations
+    def scale_remote(self, n: int):
+        self.pool.scale_to(n)
+
+    def utilization(self) -> dict:
+        return {
+            "thread2_busy_s": self.loop.t2_meter.busy_seconds(),
+            "thread3_busy_s": self.loop.t3_meter.busy_seconds(),
+            "remote_processed": sum(s.processed for s in self.pool.servers),
+            "retried": self.pool.retried,
+            "reissued": self.pool.reissued,
+            "duplicates_dropped": self.pool.duplicates_dropped,
+        }
+
+    def shutdown(self):
+        self.loop.shutdown()
+        self.pool.shutdown()

@@ -1,0 +1,65 @@
+"""Entities (VCL-object equivalents) and the Entity Response Dictionary."""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Entity:
+    """An image or video flowing through an operation pipeline.
+
+    Only *pointers* to entities travel through the queues (paper section 5.1.1);
+    the pixel payload lives on the object / in the store.
+    """
+    eid: str
+    kind: str                     # "image" | "video"
+    data: Any                     # (H,W,3) array or (T,H,W,3) for video
+    metadata: dict = dataclasses.field(default_factory=dict)
+    ops: list = dataclasses.field(default_factory=list)   # [Operation]
+    op_index: int = 0             # next op to execute
+    query_id: str = ""
+    failed: Optional[str] = None
+
+    def current_op(self):
+        return self.ops[self.op_index] if self.op_index < len(self.ops) else None
+
+    def done(self) -> bool:
+        return self.failed is not None or self.op_index >= len(self.ops)
+
+
+class ERD:
+    """Entity Response Dictionary: latest state of every entity, updated
+    after *every* operation so a failure never loses completed work
+    (paper section 5.2).  Thread_2 and Thread_3 touch disjoint entities at any
+    moment; the lock guards the dict structure itself."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._d: dict[str, dict] = {}
+
+    def update(self, entity: Entity, stage: str):
+        with self._lock:
+            self._d[entity.eid] = {
+                "data": entity.data,
+                "op_index": entity.op_index,
+                "stage": stage,
+                "ts": time.monotonic(),
+                "failed": entity.failed,
+            }
+
+    def get(self, eid: str) -> dict | None:
+        with self._lock:
+            return self._d.get(eid)
+
+    def snapshot(self) -> dict[str, dict]:
+        with self._lock:
+            return dict(self._d)
+
+    def __len__(self):
+        with self._lock:
+            return len(self._d)

@@ -1,0 +1,200 @@
+"""The asynchronous event loop (paper section 5.1.2).
+
+Two threads, two queues, four event types:
+
+- Q1-Enqueue:     an entity lands on Queue_1 (from Thread_1 or Thread_3).
+- R-UDF:          Thread_2 hits a non-native op -> entity moves to Queue_2.
+- Q2-Enqueue:     Thread_3 picks the entity up and dispatches it to a
+                  remote server / UDF process (non-blocking).
+- R-UDF-Response: a server reply triggers Thread_3's callback: update the
+                  ERD, re-enqueue the entity on Queue_1.
+
+Thread_2 executes native ops locally; Thread_3 only dispatches and
+handles callbacks, so neither ever idle-waits on remote compute — the
+paper's core claim.  The ERD is updated after every operation.
+
+Beyond-paper knobs (both default OFF so the faithful baseline is exactly
+the paper's behaviour):
+- ``fuse_native``:   jit-fuse maximal native-op runs (one dispatch per run);
+- ``batch_remote``:  coalesce up to N same-op entities per remote request,
+                     amortizing per-request network latency.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Callable, Optional
+
+from repro.core.entity import ERD, Entity
+from repro.core.pipeline import run_native_chain, run_op
+from repro.core.remote import RemoteServerPool, Request
+
+_STOP = object()
+
+
+class BusyMeter:
+    """Accumulates (start, stop) busy intervals for utilization traces."""
+
+    def __init__(self):
+        self.intervals: list[tuple[float, float]] = []
+        self._t0: float | None = None
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self):
+        if self._t0 is not None:
+            self.intervals.append((self._t0, time.monotonic()))
+            self._t0 = None
+
+    def busy_seconds(self, since: float = 0.0) -> float:
+        return sum(b - max(a, since) for a, b in self.intervals if b >= since)
+
+
+class EventLoop:
+    def __init__(self, pool: RemoteServerPool, erd: ERD, *,
+                 fuse_native: bool = False,
+                 batch_remote: int = 1,
+                 on_entity_done: Optional[Callable[[Entity], None]] = None,
+                 straggler_check_s: float = 0.1):
+        self.pool = pool
+        self.erd = erd
+        self.fuse_native = fuse_native
+        self.batch_remote = max(1, batch_remote)
+        self.on_entity_done = on_entity_done or (lambda e: None)
+        self.queue1: queue.Queue = queue.Queue()   # native work
+        self.queue2: queue.Queue = queue.Queue()   # Thread_3 inbox: dispatch + responses
+        self.t2_meter = BusyMeter()
+        self.t3_meter = BusyMeter()
+        self.straggler_check_s = straggler_check_s
+        self._stop = False
+        self.thread2 = threading.Thread(target=self._thread2, daemon=True,
+                                        name="eventloop-native")
+        self.thread3 = threading.Thread(target=self._thread3, daemon=True,
+                                        name="eventloop-remote")
+        self.thread2.start()
+        self.thread3.start()
+
+    # ------------------------------------------------------------ events
+    def enqueue(self, entity: Entity):
+        """Q1-Enqueue (from Thread_1 or a Thread_3 callback)."""
+        self.queue1.put(entity)
+
+    # ------------------------------------------------------- Thread_2 loop
+    def _thread2(self):
+        while True:
+            ent = self.queue1.get()
+            if ent is _STOP:
+                return
+            self.t2_meter.start()
+            try:
+                self._run_native(ent)
+            except Exception as e:  # noqa: BLE001
+                ent.failed = f"{type(e).__name__}: {e}"
+                self.erd.update(ent, "native-error")
+                self.on_entity_done(ent)
+            finally:
+                self.t2_meter.stop()
+
+    def _run_native(self, ent: Entity):
+        while not ent.done():
+            op = ent.current_op()
+            if not op.is_native:
+                # R-UDF: release the entity to Queue_2 and move on
+                self.queue2.put(("dispatch", ent))
+                return
+            if self.fuse_native:
+                # collect the maximal native run
+                run = []
+                j = ent.op_index
+                while j < len(ent.ops) and ent.ops[j].is_native:
+                    run.append(ent.ops[j])
+                    j += 1
+                ent.data = run_native_chain(run, ent.data, fuse=True)
+                ent.op_index = j
+                self.erd.update(ent, f"native:{run[-1].name}")
+            else:
+                ent.data = run_op(op, ent.data)
+                if hasattr(ent.data, "block_until_ready"):
+                    ent.data.block_until_ready()
+                ent.op_index += 1
+                self.erd.update(ent, f"native:{op.name}")
+        self.on_entity_done(ent)
+
+    # ------------------------------------------------------- Thread_3 loop
+    def _thread3(self):
+        pending: list[Entity] = []  # dispatch batching buffer
+        last_straggler = time.monotonic()
+        while True:
+            try:
+                msg = self.queue2.get(timeout=self.straggler_check_s)
+            except queue.Empty:
+                msg = None
+            now = time.monotonic()
+            if now - last_straggler > self.straggler_check_s:
+                self.pool.reissue_stragglers()
+                last_straggler = now
+            if msg is None:
+                if pending:
+                    self.t3_meter.start()
+                    self._flush(pending)
+                    pending = []
+                    self.t3_meter.stop()
+                continue
+            if msg is _STOP:
+                return
+            self.t3_meter.start()
+            kind = msg[0]
+            if kind == "dispatch":
+                pending.append(msg[1])
+                if len(pending) >= self.batch_remote:
+                    self._flush(pending)
+                    pending = []
+            else:
+                # R-UDF-Response callback
+                tag, req, payload = msg
+                self._handle_response(tag, req, payload)
+                if pending:
+                    self._flush(pending)
+                    pending = []
+            self.t3_meter.stop()
+
+    def _flush(self, entities: list[Entity]):
+        """Q2-Enqueue handling: dispatch entities' current ops (grouped
+        into one batched request per op when batch_remote > 1)."""
+        if self.batch_remote > 1:
+            groups: dict[Any, list[Entity]] = {}
+            for e in entities:
+                groups.setdefault(e.current_op(), []).append(e)
+            for op, group in groups.items():
+                payload = group if len(group) > 1 else group[0]
+                self.pool.dispatch(payload, op, self.queue2)
+        else:
+            for e in entities:
+                self.pool.dispatch(e, e.current_op(), self.queue2)
+
+    def _handle_response(self, tag: str, req: Request, payload):
+        status, result = self.pool.handle_response(tag, req, payload)
+        if status in ("dropped", "requeued"):
+            return
+        ents = req.entity if isinstance(req.entity, list) else [req.entity]
+        results = result if isinstance(req.entity, list) else [result]
+        for ent, res in zip(ents, results if status == "done" else [None] * len(ents)):
+            if status == "failed":
+                ent.failed = f"remote op {ent.current_op().name} failed: {payload}"
+                self.erd.update(ent, "remote-error")
+                self.on_entity_done(ent)
+                continue
+            ent.data = res
+            ent.op_index += 1
+            self.erd.update(ent, f"remote:{req.op.name}")
+            if ent.done():
+                self.on_entity_done(ent)
+            else:
+                self.enqueue(ent)  # Q1-Enqueue from Thread_3
+
+    # ---------------------------------------------------------- shutdown
+    def shutdown(self):
+        self.queue1.put(_STOP)
+        self.queue2.put(_STOP)

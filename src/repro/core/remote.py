@@ -1,0 +1,237 @@
+"""Remote operation execution (paper section 4.2 + 5.3): an ecosystem of
+kappa remote servers with plug-and-play endpoints.
+
+Each ``RemoteServer`` is a worker thread with its own request queue —
+the stand-in for a Flask endpoint on another machine.  The transport and
+capacity model is explicit and calibrated (DESIGN.md section 5): a request
+costs ``network_latency + payload_bytes/bandwidth + op_service_time``,
+realized with real op execution plus a GIL-releasing sleep for the
+network/remote-compute component, so overlap measured by the benchmarks
+is genuine host-side overlap.
+
+Production features beyond the paper's prototype:
+- least-loaded dispatch (in addition to the paper's implicit round-robin);
+- straggler mitigation: requests outstanding > ``straggler_factor`` x
+  a moving latency estimate are re-issued to another server, first
+  response wins (duplicates discarded by request id);
+- fault tolerance: a killed server's in-flight requests are re-queued,
+  retries capped by ``max_retries``; elastic scale in/out at runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import random
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.pipeline import Operation, run_op
+
+
+@dataclasses.dataclass
+class TransportModel:
+    """Calibrated cost model for the simulated network + remote compute."""
+    network_latency_s: float = 0.002      # per request round trip
+    bandwidth_bytes_s: float = 1e9        # payload both ways
+    service_time_s: float = 0.0           # extra remote compute per entity
+    execute_ops: bool = True              # actually run the op (correctness)
+
+    def cost(self, payload_bytes: int) -> float:
+        return self.network_latency_s + 2 * payload_bytes / self.bandwidth_bytes_s \
+            + self.service_time_s
+
+    def cost_batch(self, payloads: list[int]) -> float:
+        """One request carrying N entities: latency paid once (this is the
+        win batched dispatch buys — see EXPERIMENTS.md section Perf)."""
+        return self.network_latency_s + 2 * sum(payloads) / self.bandwidth_bytes_s \
+            + self.service_time_s * len(payloads)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    entity: Any          # Entity (pointer semantics, paper section 5.1.1)
+    op: Operation
+    reply_to: queue.Queue
+    issued_at: float = 0.0
+    attempt: int = 0
+    reissues: int = 0
+
+
+class RemoteServer:
+    def __init__(self, sid: int, transport: TransportModel):
+        self.sid = sid
+        self.transport = transport
+        self.inbox: queue.Queue = queue.Queue()
+        self.alive = True
+        self.busy = False
+        self.processed = 0
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=f"remote-server-{sid}")
+        self._thread.start()
+
+    def submit(self, req: Request):
+        self.inbox.put(req)
+
+    def load(self) -> int:
+        return self.inbox.qsize() + (1 if self.busy else 0)
+
+    def kill(self):
+        self.alive = False
+        self.inbox.put(None)  # wake
+
+    def _run(self):
+        while True:
+            req = self.inbox.get()
+            if req is None:
+                if not self.alive:
+                    # drain: fail everything left so the pool re-queues it
+                    while True:
+                        try:
+                            r = self.inbox.get_nowait()
+                        except queue.Empty:
+                            break
+                        if r is not None:
+                            r.reply_to.put(("server_died", r, None))
+                    return
+                continue
+            if not self.alive:
+                req.reply_to.put(("server_died", req, None))
+                continue
+            self.busy = True
+            try:
+                if isinstance(req.entity, list):  # batched dispatch
+                    datas = [e.data for e in req.entity]
+                    time.sleep(self.transport.cost_batch(
+                        [getattr(d, "nbytes", 0) for d in datas]))
+                    result = [run_op(req.op, d) if self.transport.execute_ops
+                              else d for d in datas]
+                    for r in result:
+                        if hasattr(r, "block_until_ready"):
+                            r.block_until_ready()
+                    self.processed += len(result)
+                else:
+                    data = req.entity.data
+                    payload = getattr(data, "nbytes", 0)
+                    # network + remote-capacity cost (GIL-releasing)
+                    time.sleep(self.transport.cost(payload))
+                    result = run_op(req.op, data) if self.transport.execute_ops else data
+                    if result is not None and hasattr(result, "block_until_ready"):
+                        result.block_until_ready()
+                    self.processed += 1
+                req.reply_to.put(("ok", req, result))
+            except Exception as e:  # noqa: BLE001 — report, don't kill worker
+                req.reply_to.put(("error", req, e))
+            finally:
+                self.busy = False
+
+
+class RemoteServerPool:
+    """kappa servers + dispatch policy + retry/straggler logic."""
+
+    def __init__(self, num_servers: int = 1,
+                 transport: TransportModel | None = None,
+                 policy: str = "round_robin",
+                 max_retries: int = 3,
+                 straggler_factor: float = 4.0):
+        self.transport = transport or TransportModel()
+        self.policy = policy
+        self.max_retries = max_retries
+        self.straggler_factor = straggler_factor
+        self.servers: list[RemoteServer] = [
+            RemoteServer(i, self.transport) for i in range(num_servers)]
+        self._rr = itertools.count()
+        self._rid = itertools.count()
+        self._lock = threading.Lock()
+        self.inflight: dict[int, Request] = {}
+        self.duplicates_dropped = 0
+        self.reissued = 0
+        self.retried = 0
+        self._lat_est = self.transport.cost(1 << 20)  # moving latency estimate
+        self._lat_samples = 0
+
+    # ---------------------------------------------------------- dispatch
+    def _pick(self) -> RemoteServer:
+        live = [s for s in self.servers if s.alive]
+        if not live:
+            raise RuntimeError("no live remote servers")
+        if self.policy == "least_loaded":
+            return min(live, key=lambda s: s.load())
+        return live[next(self._rr) % len(live)]
+
+    def dispatch(self, entity, op: Operation, reply_to: queue.Queue) -> int:
+        req = Request(rid=next(self._rid), entity=entity, op=op,
+                      reply_to=reply_to, issued_at=time.monotonic())
+        with self._lock:
+            self.inflight[req.rid] = req
+        self._pick().submit(req)
+        return req.rid
+
+    # --------------------------------------------------------- responses
+    def handle_response(self, tag: str, req: Request, payload):
+        """Called by the event loop with a server reply.  Returns
+        ("done", result) | ("dropped", None) | ("requeued", None)."""
+        with self._lock:
+            live = req.rid in self.inflight
+            if live:
+                del self.inflight[req.rid]
+        if not live:
+            self.duplicates_dropped += 1
+            return ("dropped", None)
+        if tag == "ok":
+            dt = time.monotonic() - req.issued_at
+            self._lat_est = 0.9 * self._lat_est + 0.1 * dt
+            self._lat_samples += 1
+            return ("done", payload)
+        # failure path: retry on another server
+        if req.attempt + 1 >= self.max_retries:
+            return ("failed", payload)
+        req.attempt += 1
+        req.issued_at = time.monotonic()
+        with self._lock:
+            self.inflight[req.rid] = req
+        self._pick().submit(req)
+        self.retried += 1
+        return ("requeued", None)
+
+    # --------------------------------------------------------- stragglers
+    def reissue_stragglers(self):
+        """Re-send requests outstanding > straggler_factor x the latency
+        estimate.  Guarded: the estimate must have warmed up (first calls
+        include jit compilation), and each request is re-issued at most
+        once — duplicates are resolved first-response-wins."""
+        if self._lat_samples < 8:
+            return
+        now = time.monotonic()
+        with self._lock:
+            slow = [r for r in self.inflight.values()
+                    if r.reissues == 0
+                    and now - r.issued_at > self.straggler_factor
+                    * max(self._lat_est, 1e-4)]
+        for r in slow:
+            self.reissued += 1
+            r.reissues += 1
+            self._pick().submit(r)
+
+    # ------------------------------------------------------------ elastic
+    def scale_to(self, n: int):
+        """Elastic scale out/in (future-work item (c) of the paper)."""
+        while len([s for s in self.servers if s.alive]) < n:
+            self.servers.append(RemoteServer(len(self.servers), self.transport))
+        live = [s for s in self.servers if s.alive]
+        for s in live[n:]:
+            s.kill()
+
+    def kill_server(self, sid: int):
+        self.servers[sid].kill()
+
+    def live_count(self) -> int:
+        return sum(s.alive for s in self.servers)
+
+    def shutdown(self):
+        for s in self.servers:
+            s.kill()

@@ -1,0 +1,83 @@
+"""User-defined operations (paper section 4.1).
+
+UDFs plug into the engine with *no engine code changes*: register a
+callable under a name; queries reference it with
+``{"type": "udf", "port": ..., "options": {"id": "<name>", ...}}``.
+In-process transport models the paper's message queue: the UDF executor
+(repro.core.remote.UDFProcess) pulls requests off a queue.Queue — the
+same decoupling as the paper's separate-process design, minus the wire.
+
+Model UDFs: ``register_model_udf`` wraps an assigned-architecture LM
+(via the serving layer) as a pipeline operation — the realistic
+"run ML inference inside the query" case the paper motivates.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable
+
+_REGISTRY: dict[str, Callable] = {}
+_LOCK = threading.Lock()
+
+
+def register_udf(name: str, fn: Callable) -> None:
+    """fn(img_or_frames, **options) -> transformed array."""
+    with _LOCK:
+        _REGISTRY[name] = fn
+
+
+def get_udf(name: str) -> Callable:
+    from repro.core.pipeline import BUILTIN_UDFS
+    with _LOCK:
+        if name in _REGISTRY:
+            return _REGISTRY[name]
+    if name in BUILTIN_UDFS:
+        return BUILTIN_UDFS[name]
+    raise KeyError(f"UDF {name!r} not registered")
+
+
+def list_udfs() -> list[str]:
+    from repro.core.pipeline import BUILTIN_UDFS
+    with _LOCK:
+        return sorted(set(_REGISTRY) | set(BUILTIN_UDFS))
+
+
+def register_model_udf(name: str, arch: str = "qwen3-0.6b", *,
+                       steps: int = 4, reduced: bool = True,
+                       labels=("WALK", "RUN", "JUMP", "SIT")) -> None:
+    """Register an assigned-architecture LM as a classification UDF.
+
+    The image is hashed into a short token prompt; the LM decodes a few
+    tokens and the argmax bucket picks a label stamped onto the image.
+    (The point is exercising real model inference inside the query
+    pipeline — prefill + decode through the serving layer.)
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.distributed.sharding import ShardingCtx
+    from repro.models import get_model
+    from repro.serving import greedy_generate
+    from repro.visual.font import draw_text
+
+    cfg = get_arch(arch, reduced=reduced)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sh = ShardingCtx(mesh=None)
+    lock = threading.Lock()
+
+    def udf(img, **_):
+        feats = jnp.clip((img * 255).astype(jnp.int32).mean(axis=(0, 1)),
+                         0, cfg.vocab_size - 1).astype(jnp.int32)
+        prompt = {"tokens": feats[None, :]}
+        if cfg.frontend == "vit_stub":
+            P = cfg.num_patches
+            pe = jax.image.resize(img, (P, 8, 3), "linear").reshape(P, -1)
+            pe = jnp.tile(pe, (1, cfg.d_model // pe.shape[-1] + 1))[:, :cfg.d_model]
+            prompt["patch_embeds"] = pe[None] * 0.02
+        with lock:  # model params shared across engine threads
+            toks = greedy_generate(model, params, prompt, steps=steps, sh=sh)
+        label = labels[int(jax.device_get(toks[0, -1])) % len(labels)]
+        return draw_text(img, label, 4, 4)
+
+    register_udf(name, udf)

@@ -1,0 +1,3 @@
+from repro.dataio.synthetic import (  # noqa: F401
+    synthetic_faces, synthetic_video, lm_token_stream)
+from repro.dataio.loader import ShardedLoader  # noqa: F401

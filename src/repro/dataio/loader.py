@@ -1,0 +1,45 @@
+"""Sharded, double-buffered data loader.
+
+Each host process loads only its shard of the global batch (shard =
+process_index over the data axis) and a background thread prefetches the
+next batch while the device computes — the standard input-pipeline
+overlap, host-side twin of the paper's "never idle-wait" principle."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import numpy as np
+
+
+class ShardedLoader:
+    def __init__(self, make_batch: Callable[[int], dict], *,
+                 prefetch: int = 2, start_step: int = 0):
+        """make_batch(step) -> dict of np arrays (this host's shard)."""
+        self.make_batch = make_batch
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._step = start_step
+        self._stop = False
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        step = self._step
+        while not self._stop:
+            batch = self.make_batch(step)
+            self._q.put((step, batch))
+            step += 1
+
+    def __iter__(self) -> Iterator[tuple[int, dict]]:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def stop(self):
+        self._stop = True
+        try:  # unblock the producer
+            self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,14 @@
+"""Distributed substrate: logical-axis sharding rules, mesh helpers,
+fault tolerance, and elastic re-meshing.
+
+The paper's "ecosystem of kappa remote servers" maps onto the mesh's
+data-parallel axis; tensor parallelism within one "server" maps onto the
+model axis.  See DESIGN.md section 6.
+"""
+from repro.distributed.sharding import (  # noqa: F401
+    LogicalRules,
+    default_rules,
+    logical_to_spec,
+    tree_to_shardings,
+    constrain,
+)

@@ -1,0 +1,32 @@
+"""Elastic re-meshing: continue training/serving after the device pool
+changes (node failure shrinks it; recovery/scale-up grows it).
+
+``remesh_tree`` re-lays a sharded pytree onto a new mesh by re-deriving
+every leaf's NamedSharding from the same logical axes under the new mesh
+(divisibility-demoted where the new axis sizes require) and
+``device_put``-ing across.  Combined with the atomic checkpoints this is
+the restart path: resume(ckpt) -> remesh to the surviving topology ->
+continue.  The engine-side analogue (scaling the remote-server pool) is
+``RemoteServerPool.scale_to``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.distributed.sharding import LogicalRules, tree_to_shardings
+
+
+def remesh_tree(tree: Any, axes_tree: Any, new_mesh, rules: LogicalRules):
+    """Re-shard ``tree`` (same structure as ``axes_tree``) onto ``new_mesh``."""
+    shardings = tree_to_shardings(tree, axes_tree, new_mesh, rules)
+    return jax.device_put(tree, shardings)
+
+
+def shrink_batch_for_mesh(global_batch: int, mesh) -> int:
+    """Largest batch <= global_batch divisible by the mesh's DP extent —
+    keeps per-device shapes static after losing nodes."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    return max((global_batch // dp) * dp, dp)

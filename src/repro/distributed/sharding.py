@@ -1,0 +1,215 @@
+"""Logical-axis sharding (MaxText-style rules).
+
+Every parameter / activation carries a tuple of *logical* axis names
+(e.g. ``("embed", "ff")``).  A rules table maps logical names to mesh
+axes.  This indirection lets one model definition serve every mesh in
+``repro.launch.mesh`` (single-pod 16x16, multi-pod 2x16x16, and the tiny
+CPU meshes used by smoke tests) and lets the perf loop re-shard a model
+by editing one dict instead of touching layer code.
+
+Conventions
+-----------
+- ``batch``      -> all data-parallel axes ("pod" and "data" when present).
+- ``vocab``      -> "model" (embedding + logits are vocab-sharded; vocab
+                    sizes are padded to a multiple of 512 in configs).
+- ``ff`` / ``heads_fused`` / ``expert_ff`` -> "model" (tensor parallel).
+- ``experts``    -> "data"  (expert storage sharded over the DP axis;
+                    dispatch crosses it with an all-to-all, which is the
+                    paper's "offload to kappa remote servers" realized on
+                    a TPU mesh).
+- ``cache_seq``  -> "model" for decode KV caches (flash-decode style
+                    sequence sharding; queries are tiny at decode so the
+                    partial-softmax reduction is cheap).
+- anything unknown -> replicated.
+
+Rules may map a logical axis to ``None`` (replicate), a mesh axis name,
+or a tuple of mesh axis names.  Mesh axes absent from the active mesh
+are silently dropped so the same rules work on 1-device test meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+LogicalRules = Mapping[str, Any]  # logical axis -> None | str | tuple[str, ...]
+
+
+def default_rules() -> dict[str, Any]:
+    """Baseline rules table (the paper-faithful starting point).
+
+    The perf hillclimb (EXPERIMENTS.md section Perf) overrides entries per
+    architecture via ``ArchConfig.sharding_overrides``.
+    """
+    return {
+        # activations
+        "batch": ("pod", "data"),
+        "seq": None,
+        "embed": None,
+        "act_ff": "model",
+        "act_heads": "model",
+        "cache_seq": "model",
+        "cache_heads": None,
+        # params: attention / mlp
+        "vocab": "model",
+        "ff": "model",
+        "heads_fused": "model",   # fused (num_heads * head_dim) projection dim
+        "kv_fused": "model",      # fused (num_kv_heads * head_dim) dim
+        "head_dim": None,
+        # params: MoE
+        "experts": "data",
+        "expert_ff": "model",
+        # params: SSM / conv
+        "ssm_inner": "model",
+        "ssm_state": None,
+        "ssm_heads": None,
+        "conv_k": None,
+        # scan-over-layers leading axis
+        "layers": None,
+        # replicated scalars etc.
+        None: None,
+    }
+
+
+def _mesh_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def logical_to_spec(
+    axes: Sequence[str | None] | None,
+    rules: LogicalRules,
+    mesh: Mesh,
+) -> P:
+    """Translate a tuple of logical axis names into a PartitionSpec.
+
+    Guarantees each mesh axis is used at most once (first logical axis
+    wins; later conflicting entries fall back to replication) and that
+    only axes present in ``mesh`` are referenced.
+    """
+    if axes is None:
+        return P()
+    present = set(_mesh_axes(mesh))
+    used: set[str] = set()
+    out: list[Any] = []
+    for name in axes:
+        entry = rules.get(name, None) if name is not None else None
+        if entry is None:
+            out.append(None)
+            continue
+        if isinstance(entry, str):
+            entry = (entry,)
+        picked = tuple(a for a in entry if a in present and a not in used)
+        used.update(picked)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(picked)
+    # trim trailing Nones for tidier specs
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def spec_divisible(shape: Sequence[int], spec: P, mesh: Mesh) -> bool:
+    """True if every sharded dim of ``shape`` divides evenly."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, entry in zip(shape, tuple(spec)):
+        if entry is None:
+            continue
+        names = (entry,) if isinstance(entry, str) else entry
+        total = 1
+        for n in names:
+            total *= sizes[n]
+        if dim % total != 0:
+            return False
+    return True
+
+
+def safe_spec(shape: Sequence[int], axes, rules, mesh) -> P:
+    """logical_to_spec, demoting any unevenly-divisible dim to replicated.
+
+    GSPMD supports uneven sharding, but keeping parameter shards even makes
+    checkpoint layouts and memory accounting exact; activations go through
+    ``constrain`` which uses the same guard.
+    """
+    spec = logical_to_spec(axes, rules, mesh)
+    entries = list(tuple(spec))
+    entries += [None] * (len(shape) - len(entries))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for i, (dim, entry) in enumerate(zip(shape, entries)):
+        if entry is None:
+            continue
+        names = (entry,) if isinstance(entry, str) else entry
+        total = 1
+        for n in names:
+            total *= sizes[n]
+        if dim % total != 0:
+            entries[i] = None
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_to_shardings(
+    param_tree: Any,
+    spec_tree: Any,
+    mesh: Mesh,
+    rules: LogicalRules,
+) -> Any:
+    """Mirror a (params, logical-axes) tree pair into NamedShardings.
+
+    ``spec_tree`` has the same structure as ``param_tree`` with tuples of
+    logical axis names (or None) at the leaves.  Leaves are matched by
+    structure; shape-aware divisibility demotion is applied.
+    """
+    flat_p, treedef = jax.tree.flatten(param_tree)
+    flat_s = treedef.flatten_up_to(spec_tree)
+    out = []
+    for p, axes in zip(flat_p, flat_s):
+        shape = getattr(p, "shape", ())
+        out.append(NamedSharding(mesh, safe_spec(shape, axes, rules, mesh)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_to_specs(param_tree: Any, spec_tree: Any, mesh: Mesh, rules: LogicalRules) -> Any:
+    """Like tree_to_shardings but returns raw PartitionSpecs."""
+    flat_p, treedef = jax.tree.flatten(param_tree)
+    flat_s = treedef.flatten_up_to(spec_tree)
+    out = [safe_spec(getattr(p, "shape", ()), axes, rules, mesh) for p, axes in zip(flat_p, flat_s)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def constrain(x: jax.Array, axes: Sequence[str | None], rules: LogicalRules, mesh: Mesh | None):
+    """with_sharding_constraint via logical axes; no-op off-mesh or on 1 device."""
+    if mesh is None or mesh.size == 1:
+        return x
+    spec = safe_spec(x.shape, axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    """Carried through model apply functions: mesh + active rules.
+
+    ``mesh=None`` means "single device / no constraints" (smoke tests).
+    """
+    mesh: Mesh | None = None
+    rules: LogicalRules = dataclasses.field(default_factory=default_rules)
+
+    def __call__(self, x: jax.Array, *axes: str | None) -> jax.Array:
+        return constrain(x, axes, self.rules, self.mesh)
+
+    def with_overrides(self, overrides: Mapping[str, Any] | None) -> "ShardingCtx":
+        if not overrides:
+            return self
+        rules = dict(self.rules)
+        rules.update(overrides)
+        return ShardingCtx(mesh=self.mesh, rules=rules)
+
+
+REPLICATED = ShardingCtx(mesh=None)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+Layout per kernel ``<name>``:
+- ``<name>.py`` — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling
+- ``ops.py``    — jit'd public wrappers with impl dispatch
+- ``ref.py``    — pure-jnp oracles (also the CPU execution path)
+"""
+from repro.kernels.ops import (  # noqa: F401
+    flash_attention,
+    decode_attention,
+    gaussian_blur,
+    rwkv6_scan,
+    mamba2_ssd,
+)

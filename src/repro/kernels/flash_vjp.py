@@ -1,0 +1,171 @@
+"""Flash attention with a flash *backward* (custom VJP), pure jnp.
+
+Without this, differentiating the online-softmax scan stores every
+per-iteration probability block as a residual — O(S^2) memory, erasing
+the point of flash attention (observed: 15.6 GB temp for qwen3-0.6b
+train_4k).  The custom VJP saves only (q, k, v, out, lse) and recomputes
+probability blocks in the backward pass (FlashAttention-2 scheme), block
+pair by block pair via dynamic slices, so both passes are O(block^2)
+memory.  This is the same math the Pallas TPU kernel implements; XLA
+lowers this form on any backend, and the dry-run roofline reflects it.
+
+GQA is handled by grouping q-heads per kv-head (no materialized repeat).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pad_to(x, block, axis):
+    pad = (-x.shape[axis]) % block
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def _mask_bias(qpos, kpos, causal, sq, sk):
+    """(qb, kb) additive f32 bias (0 valid / NEG_INF masked).  A 2-D f32
+    bias broadcast into the logits fuses cleanly; building (B,H,q,k) bool
+    tensors instead was observed to materialize multi-GB pred stacks."""
+    m = (kpos[None, :] < sk) & (qpos[:, None] < sq)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    return jnp.where(m, 0.0, NEG_INF).astype(jnp.float32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def flash_attention(q, k, v, q_offset=0, causal=True, sm_scale=None,
+                    q_block=512, kv_block=1024):
+    """(B,Sq,H,D),(B,Sk,Hkv,D) -> (B,Sq,H,D).  ``q_offset`` may be a
+    traced int32 scalar (prefill-into-cache), so it rides in diff position
+    with a None cotangent."""
+    out, _ = _fwd_impl(q, k, v, causal, sm_scale, q_block, kv_block, q_offset)
+    return out
+
+
+def _fwd_impl(q, k, v, causal, sm_scale, q_block, kv_block, q_offset):
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    q_block = min(q_block, max(Sq, 1))
+    kv_block = min(kv_block, max(Sk, 1))
+
+    qp = _pad_to(q, q_block, 1).astype(jnp.float32)
+    kp = _pad_to(k, kv_block, 1).astype(jnp.float32)
+    vp = _pad_to(v, kv_block, 1).astype(jnp.float32)
+    nq, nk = qp.shape[1] // q_block, kp.shape[1] // kv_block
+
+    def q_loop(qi):
+        qb = jax.lax.dynamic_slice_in_dim(qp, qi * q_block, q_block, axis=1)
+        qb = qb.reshape(B, q_block, Hkv, G, D)
+        qpos = qi * q_block + jnp.arange(q_block) + q_offset
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(kp, ki * kv_block, kv_block, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(vp, ki * kv_block, kv_block, axis=1)
+            kpos = ki * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb) * scale
+            s = s + _mask_bias(qpos, kpos, causal, Sq + q_offset, Sk)[None, None, None]
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vb)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_block, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        o = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        # cast per block so lax.map stacks the narrow dtype, not f32
+        return (o.transpose(0, 3, 1, 2, 4).reshape(B, q_block, H, D).astype(q.dtype),
+                lse.transpose(0, 3, 1, 2).reshape(B, q_block, H))
+
+    outs, lses = jax.lax.map(q_loop, jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_block, H, D)[:, :Sq]
+    lse = lses.transpose(1, 0, 2, 3).reshape(B, nq * q_block, H)[:, :Sq]
+    return out, lse
+
+
+def _fwd(q, k, v, q_offset, causal, sm_scale, q_block, kv_block):
+    out, lse = _fwd_impl(q, k, v, causal, sm_scale, q_block, kv_block, q_offset)
+    return out, (q, k, v, out, lse, q_offset)
+
+
+def _bwd(causal, sm_scale, q_block, kv_block, res, do):
+    q, k, v, out, lse, q_offset = res
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    q_block = min(q_block, max(Sq, 1))
+    kv_block = min(kv_block, max(Sk, 1))
+
+    qp = _pad_to(q, q_block, 1).astype(jnp.float32)
+    kp = _pad_to(k, kv_block, 1).astype(jnp.float32)
+    vp = _pad_to(v, kv_block, 1).astype(jnp.float32)
+    dop = _pad_to(do, q_block, 1).astype(jnp.float32)
+    lsep = _pad_to(lse, q_block, 1).astype(jnp.float32)
+    # delta = rowsum(dO * O)
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    deltap = _pad_to(delta, q_block, 1)
+    nq, nk = qp.shape[1] // q_block, kp.shape[1] // kv_block
+
+    def q_loop(carry, qi):
+        dk_acc, dv_acc = carry
+        qb = jax.lax.dynamic_slice_in_dim(qp, qi * q_block, q_block, 1)
+        dob = jax.lax.dynamic_slice_in_dim(dop, qi * q_block, q_block, 1)
+        lseb = jax.lax.dynamic_slice_in_dim(lsep, qi * q_block, q_block, 1)
+        delb = jax.lax.dynamic_slice_in_dim(deltap, qi * q_block, q_block, 1)
+        qb = qb.reshape(B, q_block, Hkv, G, D)
+        dob = dob.reshape(B, q_block, Hkv, G, D)
+        lseb = lseb.reshape(B, q_block, Hkv, G).transpose(0, 2, 3, 1)
+        delb = delb.reshape(B, q_block, Hkv, G).transpose(0, 2, 3, 1)
+        qpos = qi * q_block + jnp.arange(q_block) + q_offset
+
+        def kv_step(inner, ki):
+            dq_b, dk_a, dv_a = inner
+            kb = jax.lax.dynamic_slice_in_dim(kp, ki * kv_block, kv_block, 1)
+            vb = jax.lax.dynamic_slice_in_dim(vp, ki * kv_block, kv_block, 1)
+            kpos = ki * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb) * scale
+            s = s + _mask_bias(qpos, kpos, causal, Sq + q_offset, Sk)[None, None, None]
+            p = jnp.exp(s - lseb[..., None])                       # (B,Hkv,G,qb,kb)
+            dv_blk = jnp.einsum("bhgqk,bqhgd->bkhd", p, dob)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", dob, vb)
+            ds = p * (dp - delb[..., None]) * scale
+            dq_b = dq_b + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kb)
+            dk_blk = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qb)
+            dk_a = jax.lax.dynamic_update_slice_in_dim(
+                dk_a, jax.lax.dynamic_slice_in_dim(dk_a, ki * kv_block, kv_block, 1)
+                + dk_blk, ki * kv_block, 1)
+            dv_a = jax.lax.dynamic_update_slice_in_dim(
+                dv_a, jax.lax.dynamic_slice_in_dim(dv_a, ki * kv_block, kv_block, 1)
+                + dv_blk, ki * kv_block, 1)
+            return (dq_b, dk_a, dv_a), None
+
+        dq0 = jnp.zeros((B, q_block, Hkv, G, D), jnp.float32)
+        (dq_b, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dq_b.reshape(B, q_block, H, D)
+
+    dk0 = jnp.zeros_like(kp)
+    dv0 = jnp.zeros_like(vp)
+    (dk, dv), dqs = jax.lax.scan(q_loop, (dk0, dv0), jnp.arange(nq))
+    dq = dqs.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_block, H, D)[:, :Sq]
+    return (dq.astype(q.dtype), dk[:, :Sk].astype(k.dtype),
+            dv[:, :Sk].astype(v.dtype), None)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,91 @@
+"""Separable Gaussian blur Pallas TPU kernel.
+
+The wrapper reflect-101 pads the image by ``ksize//2`` on both spatial
+axes (matching OpenCV's default border), then the kernel computes a
+*valid* separable convolution over row bands:
+
+  grid = (batch, H/block_rows); each step sees its own band plus the next
+  band (two refs on the same padded input, index_maps i and i+1) so the
+  vertical taps never leave VMEM.  Taps are a static unroll of
+  shift-multiply-adds — pure VPU work with no gather, which is the
+  TPU-native way to express a small stencil.
+
+VMEM at 1080p, block_rows=128, ksize<=31: 2 bands x 128 x (1920+30) x 3
+x 4B ~= 6 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.ref import gaussian_kernel_1d, _reflect101_pad
+
+
+def _blur_kernel(cur_ref, nxt_ref, o_ref, *, ky, kx, block_rows, out_h):
+    i = pl.program_id(1)
+    band = jnp.concatenate([cur_ref[0], nxt_ref[0]], axis=0).astype(jnp.float32)
+    # vertical pass: rows [0, block_rows) of output need rows [l, l+K) of band
+    K = len(ky)
+    tmp = ky[0] * band[0:block_rows]
+    for t in range(1, K):
+        tmp = tmp + ky[t] * band[t:t + block_rows]
+    # horizontal pass (width padded by K-1): out cols [0, W)
+    W = o_ref.shape[2]
+    out = kx[0] * tmp[:, 0:W]
+    for t in range(1, K):
+        out = out + kx[t] * tmp[:, t:t + W]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def gaussian_blur_pallas(
+    img: jax.Array,  # (N, H, W, C) or (H, W, C)
+    ksize: int,
+    sigma_x: float,
+    sigma_y: float | None = None,
+    *,
+    block_rows: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    if sigma_y is None:
+        sigma_y = sigma_x
+    squeeze = img.ndim == 3
+    if squeeze:
+        img = img[None]
+    N, H, W, C = img.shape
+    pad = ksize // 2
+    block_rows = max(min(block_rows, H), 2 * pad if pad else 1)
+
+    ky = tuple(float(x) for x in gaussian_kernel_1d(ksize, sigma_y))
+    kx = tuple(float(x) for x in gaussian_kernel_1d(ksize, sigma_x))
+
+    x = _reflect101_pad(_reflect101_pad(img, pad, axis=-3), pad, axis=-2)
+    # pad rows up to a multiple of block_rows (+ one extra band for `next`)
+    rows_needed = ((H + block_rows - 1) // block_rows + 1) * block_rows + 2 * pad
+    x = jnp.pad(x, ((0, 0), (0, rows_needed - x.shape[1]), (0, 0), (0, 0)))
+    nb = H // block_rows + (1 if H % block_rows else 0)
+    wp = W + 2 * pad
+
+    kernel = functools.partial(_blur_kernel, ky=ky, kx=kx,
+                               block_rows=block_rows, out_h=H)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"))
+    out = pl.pallas_call(
+        kernel,
+        grid=(N, nb),
+        in_specs=[
+            pl.BlockSpec((1, block_rows, wp, C), lambda n, i: (n, i, 0, 0)),
+            pl.BlockSpec((1, block_rows, wp, C), lambda n, i: (n, i + 1, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_rows, W, C), lambda n, i: (n, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, nb * block_rows, W, C), img.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(x, x)
+    out = out[:, :H]
+    return out[0] if squeeze else out

@@ -1,0 +1,88 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``impl`` selection:
+- "auto"             -> Pallas on TPU backends, jnp reference elsewhere
+                        (this container is CPU, so auto == reference; the
+                        dry-run therefore lowers the reference math, which
+                        is FLOP-identical to the kernels).
+- "pallas"           -> compiled Pallas kernel (TPU).
+- "pallas_interpret" -> Pallas kernel body interpreted on CPU (used by
+                        tests to validate kernels against the oracles).
+- "naive"/"chunked"  -> explicit jnp paths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ----------------------------------------------------------------- attn
+def flash_attention(q, k, v, *, causal=True, sm_scale=None, impl="auto",
+                    q_block=512, kv_block=1024, q_offset=0):
+    """(B,Sq,H,D) x (B,Sk,Hkv,D) -> (B,Sq,H,D); GQA via Hkv | H."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "chunked"
+    if impl == "naive":
+        return ref.naive_attention(q, k, v, causal=causal, sm_scale=sm_scale,
+                                   q_offset=q_offset)
+    if impl == "chunked":
+        return ref.flash_attention_jnp(q, k, v, causal=causal, sm_scale=sm_scale,
+                                       q_block=q_block, kv_block=kv_block,
+                                       q_offset=q_offset)
+    from repro.kernels import flash_attention as fa
+    return fa.flash_attention_pallas(
+        q, k, v, causal=causal, sm_scale=sm_scale,
+        block_q=q_block, block_k=kv_block,
+        interpret=(impl == "pallas_interpret"))
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, sm_scale=None, impl="auto"):
+    """Single-token attention against a cache: q (B,1,H,D)."""
+    return ref.decode_attention_ref(q, k_cache, v_cache, cache_len, sm_scale=sm_scale)
+
+
+# ----------------------------------------------------------------- blur
+def gaussian_blur(img, ksize: int, sigma_x: float, sigma_y: float | None = None,
+                  *, impl="auto"):
+    """img (..., H, W, C); OpenCV-compatible separable Gaussian blur."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.gaussian_blur_ref(img, ksize, sigma_x, sigma_y)
+    from repro.kernels import gaussian_blur as gb
+    return gb.gaussian_blur_pallas(img, ksize, sigma_x, sigma_y,
+                                   interpret=(impl == "pallas_interpret"))
+
+
+# ----------------------------------------------------------------- rwkv
+def rwkv6_scan(r, k, v, w, u, state=None, *, impl="auto", chunk=64):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "chunked"
+    if impl == "ref":
+        return ref.rwkv6_scan_ref(r, k, v, w, u, state)
+    if impl == "chunked":
+        return ref.rwkv6_chunked_jnp(r, k, v, w, u, state, chunk=chunk)
+    from repro.kernels import rwkv6_scan as rk
+    return rk.rwkv6_scan_pallas(r, k, v, w, u, state, chunk=chunk,
+                                interpret=(impl == "pallas_interpret"))
+
+
+# ---------------------------------------------------------------- mamba
+def mamba2_ssd(x, dt, A, Bm, Cm, D=None, state=None, *, impl="auto", chunk=128):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "chunked"
+    if impl == "ref":
+        return ref.mamba2_ssd_ref(x, dt, A, Bm, Cm, D, state)
+    if impl == "chunked":
+        return ref.mamba2_ssd_chunked_jnp(x, dt, A, Bm, Cm, D, state, chunk=chunk)
+    from repro.kernels import mamba2_ssd as mk
+    return mk.mamba2_ssd_pallas(x, dt, A, Bm, Cm, D, state, chunk=chunk,
+                                interpret=(impl == "pallas_interpret"))

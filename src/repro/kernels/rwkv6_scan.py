@@ -1,0 +1,130 @@
+"""RWKV6 WKV Pallas TPU kernel (chunked linear attention).
+
+State S (K x V per head) lives in VMEM scratch and persists across the
+sequential chunk axis of the grid — the TPU grid is sequential along the
+last dimension, which is exactly the recurrence structure WKV needs.
+Per-chunk math is the closed form with log-space cumulative decays (all
+exponent differences are <= 0 for valid pairs, so no overflow):
+
+  out_t = r_t . (diag(Wbar_{t-1}) S_in)                       (inter)
+        + sum_{s<t} [sum_k r_tk k_sk exp(lw_{t-1,k}-lw_{s,k})] v_s   (intra)
+        + (r_t . u k_t) v_t                                   (bonus)
+  S_out = diag(exp(lw_last)) S_in + sum_s (k_s exp(lw_last - lw_s)) v_s^T
+
+Working set per (batch, head): chunk x K tiles + a (chunk, chunk, K)
+pairwise-decay cube — chunk=64, K=64 -> 1 MB f32, VMEM-resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                o_ref, sout_ref, s_scr, *, chunk):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    rc = r_ref[0, 0].astype(jnp.float32)   # (c, K)
+    kc = k_ref[0, 0].astype(jnp.float32)   # (c, K)
+    vc = v_ref[0, 0].astype(jnp.float32)   # (c, V)
+    wc = w_ref[0, 0].astype(jnp.float32)   # (c, K)
+    u = u_ref[0].astype(jnp.float32)       # (K,)
+    s = s_scr[...]                          # (K, V)
+
+    logw = jnp.log(jnp.maximum(wc, 1e-30))
+    lw = jnp.cumsum(logw, axis=0)           # (c, K)
+    lw_prev = lw - logw                     # sum over strictly-previous steps
+
+    # inter-chunk
+    q_in = rc * jnp.exp(lw_prev)            # (c, K)
+    y = jax.lax.dot_general(q_in, s, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (c, V)
+
+    # intra-chunk (per-channel decay -> reduce over K with a masked cube)
+    diff = lw_prev[:, None, :] - lw[None, :, :]          # (c_t, c_s, K)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    dec = jnp.exp(jnp.where(tri[..., None], diff, -1e30))
+    att = jnp.sum(rc[:, None, :] * dec * kc[None, :, :], axis=-1)  # (c, c)
+    y = y + jax.lax.dot_general(att, vc, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # current-token bonus
+    bonus = jnp.sum(rc * u[None, :] * kc, axis=-1, keepdims=True)  # (c,1)
+    y = y + bonus * vc
+
+    # state update
+    lw_last = lw[-1:, :]                                  # (1, K)
+    k_dec = kc * jnp.exp(lw_last - lw)                    # (c, K)
+    s_scr[...] = jnp.exp(lw_last[0])[:, None] * s + jax.lax.dot_general(
+        k_dec, vc, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        sout_ref[0, 0] = s_scr[...].astype(sout_ref.dtype)
+
+
+def rwkv6_scan_pallas(
+    r: jax.Array,  # (B, T, H, K)
+    k: jax.Array,
+    v: jax.Array,  # (B, T, H, V)
+    w: jax.Array,  # (B, T, H, K) decays in (0,1)
+    u: jax.Array,  # (H, K)
+    state: jax.Array | None = None,  # (B, H, K, V)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, H, K, V), jnp.float32)
+    pad = (-T) % chunk
+    # layout (B, H, T, *)
+    rt, kt, vt = (a.transpose(0, 2, 1, 3) for a in (r, k, v))
+    wt = w.transpose(0, 2, 1, 3)
+    if pad:
+        rt, kt, vt = (jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0))) for a in (rt, kt, vt))
+        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    nc = (T + pad) // chunk
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    out, s_out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, V), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, K), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, V), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nc * chunk, V), r.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(rt, kt, vt, wt, u, state)
+    return out[:, :, :T].transpose(0, 2, 1, 3), s_out

@@ -1,0 +1,407 @@
+"""Loop-aware HLO cost extraction for the roofline analysis.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, so a
+scan-over-layers model under-reports FLOPs/bytes by ~num_layers x
+(verified empirically — see EXPERIMENTS.md section Roofline, Methodology).
+This module re-derives the three roofline inputs from the optimized HLO
+text with loop bodies scaled by their trip counts:
+
+- flops:            every ``dot`` (2 * prod(result) * contracted_size,
+                    XLA's own convention) x computation multiplicity.
+- collective bytes: operand bytes of all-reduce / all-gather /
+                    reduce-scatter / all-to-all / collective-permute
+                    x multiplicity.
+- hbm bytes:        sum over non-fused ops of (operand + result bytes)
+                    x multiplicity — the same per-op convention as XLA's
+                    "bytes accessed" (fusion interiors excluded: fused
+                    values never round-trip HBM).
+
+Multiplicity: entry = 1; while bodies x trip count (taken from the
+``known_trip_count`` backend config, falling back to the loop condition's
+integer constant); fusion/call/conditional propagate the caller's
+multiplicity.  Validated against cost_analysis() on fully unrolled
+variants in tests/test_hlo_costs.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_CALL_ATTR_RE = re.compile(r"(?:to_apply|body|condition|calls)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r'known_trip_count.*?"n"\s*:\s*"?(\d+)')
+_REF_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "iota", "after-all", "partition-id", "replica-id"}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_shape_dims(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_text: str
+    operands_text: str
+    attrs_text: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: list
+
+
+def _split_call_args(args_text: str) -> tuple[str, str]:
+    """Split 'operands), attrs...' at the closing paren of the call."""
+    depth = 1
+    for i, ch in enumerate(args_text):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return args_text[:i], args_text[i + 1:]
+    return args_text, ""
+
+
+def parse_computations(hlo: str) -> tuple[dict[str, Computation], dict[str, str]]:
+    """Returns (computations, symbol table op-name -> result shape text)."""
+    comps: dict[str, Computation] = {}
+    symbols: dict[str, str] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line)
+        if m and ("=" not in line.split("(")[0]):
+            cur = Computation(name=m.group(2), is_entry=bool(m.group(1)), ops=[])
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            name, result_text, kind, rest = om.groups()
+            operands, attrs = _split_call_args(rest)
+            cur.ops.append(Op(name=name, kind=kind, result_text=result_text,
+                              operands_text=operands, attrs_text=attrs))
+            symbols[name] = result_text
+    return comps, symbols
+
+
+def _operand_bytes(op: Op, symbols: dict[str, str]) -> int:
+    """Resolve %refs in the operand list through the symbol table; count
+    inline-shaped operands too (older HLO dialects carry shapes inline)."""
+    inline = _shape_bytes(op.operands_text)
+    if inline:
+        return inline
+    total = 0
+    for ref in _REF_RE.findall(op.operands_text):
+        total += _shape_bytes(symbols.get(ref, ""))
+    return total
+
+
+def _operand_shape(op: Op, symbols: dict[str, str], idx: int):
+    refs = _REF_RE.findall(op.operands_text)
+    if idx < len(refs):
+        return _first_shape_dims(symbols.get(refs[idx], ""))
+    # inline shapes fallback
+    shapes = _SHAPE_RE.findall(op.operands_text)
+    if idx < len(shapes):
+        dims = shapes[idx][1]
+        return [int(d) for d in dims.split(",")] if dims else []
+    return None
+
+
+def _while_trip_count(op: Op, comps: dict[str, Computation]) -> int:
+    m = _TRIP_RE.search(op.attrs_text)
+    if m:
+        return int(m.group(1))
+    cm = re.search(r"condition=%?([\w.\-]+)", op.attrs_text)
+    best = 1
+    if cm and cm.group(1) in comps:
+        for cop in comps[cm.group(1)].ops:
+            for c in _CONST_RE.findall(cop.operands_text + cop.attrs_text):
+                best = max(best, int(c))
+    return best
+
+
+def computation_multiplicities(comps: dict[str, Computation]) -> dict[str, float]:
+    edges: dict[str, list] = {}
+    entries = [c for c in comps.values() if c.is_entry]
+    for c in comps.values():
+        es = []
+        for op in c.ops:
+            if op.kind == "while":
+                trip = _while_trip_count(op, comps)
+                for key, val in re.findall(r"(body|condition)=%?([\w.\-]+)",
+                                           op.attrs_text):
+                    es.append((val, float(trip) if key == "body" else float(trip + 1)))
+            elif op.kind == "conditional":
+                bm = _BRANCH_RE.search(op.attrs_text)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        b = b.strip().lstrip("%")
+                        if b:
+                            es.append((b, 1.0))
+            else:
+                for callee in _CALL_ATTR_RE.findall(op.attrs_text):
+                    if callee in comps:
+                        es.append((callee, 1.0))
+        edges[c.name] = es
+
+    # Kahn topological order so every caller's multiplicity is final
+    # before being propagated.
+    reachable: set[str] = set()
+
+    def mark(name):
+        if name in reachable or name not in comps:
+            return
+        reachable.add(name)
+        for callee, _ in edges.get(name, []):
+            mark(callee)
+
+    for e in entries:
+        mark(e.name)
+    indeg = {n: 0 for n in reachable}
+    for n in reachable:
+        for callee, _ in edges.get(n, []):
+            if callee in indeg:
+                indeg[callee] += 1
+    queue = [n for n in reachable if indeg[n] == 0]
+    mult: dict[str, float] = defaultdict(float)
+    for e in entries:
+        mult[e.name] = 1.0
+    while queue:
+        cname = queue.pop()
+        m = mult.get(cname, 0.0)
+        for callee, _f in edges.get(cname, []):
+            if callee not in indeg:
+                continue
+            mult[callee] += m * _f
+            indeg[callee] -= 1
+            if indeg[callee] == 0:
+                queue.append(callee)
+    return dict(mult)
+
+
+def _dot_flops(op: Op, symbols: dict[str, str]) -> float:
+    rdims = _first_shape_dims(op.result_text)
+    if rdims is None:
+        return 0.0
+    out_elems = 1
+    for d in rdims:
+        out_elems *= d
+    lhs = _operand_shape(op, symbols, 0)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs_text)
+    contracted = 1
+    if lhs and m and m.group(1):
+        for i in m.group(1).split(","):
+            i = int(i)
+            if i < len(lhs):
+                contracted *= lhs[i]
+    return 2.0 * out_elems * contracted
+
+
+def _conv_flops(op: Op, symbols: dict[str, str]) -> float:
+    rdims = _first_shape_dims(op.result_text)
+    kdims = _operand_shape(op, symbols, 1)
+    if rdims is None or kdims is None:
+        return 0.0
+    out_elems = 1
+    for d in rdims:
+        out_elems *= d
+    kelems = 1
+    for d in kdims:
+        kelems *= d
+    return 2.0 * out_elems * kelems  # upper bound (stub frontends only)
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    collective_bytes: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_breakdown: dict = dataclasses.field(default_factory=dict)
+    while_trips: dict = dataclasses.field(default_factory=dict)
+    unparsed_custom_calls: int = 0
+
+
+_SLICE_KINDS = {"dynamic-slice", "slice", "gather"}
+_CONTROL_KINDS = {"while", "call", "conditional"}
+
+
+def _op_traffic(op: Op, symbols: dict[str, str],
+                comps: dict[str, Computation]) -> float:
+    """HBM bytes for one op, following XLA HloCostAnalysis conventions:
+    - slice-like ops read only what they produce;
+    - dynamic-update-slice is in-place (read+write of the update only);
+    - fusions charge their result plus rule-based reads of each parameter
+      (a parameter consumed only through a slice inside the fusion is
+      charged at the slice size — the lax.scan layer-stack pattern);
+    - control-flow ops charge nothing themselves (their bodies are walked
+      with multiplicity separately)."""
+    kind = op.kind
+    if kind in _SKIP_TRAFFIC or kind in _CONTROL_KINDS:
+        return 0.0
+    result_b = _shape_bytes(op.result_text)
+    if kind in _SLICE_KINDS:
+        return 2.0 * result_b
+    if kind == "dynamic-update-slice":
+        refs = _REF_RE.findall(op.operands_text)
+        upd = _shape_bytes(symbols.get(refs[1], "")) if len(refs) > 1 else result_b
+        return 2.0 * upd
+    if kind == "fusion":
+        callee = None
+        for cn in _CALL_ATTR_RE.findall(op.attrs_text):
+            if cn in comps:
+                callee = comps[cn]
+        reads = 0.0
+        refs = _REF_RE.findall(op.operands_text)
+        if callee is not None:
+            param_charge: dict[int, float] = {}
+            for iop in callee.ops:
+                if iop.kind == "parameter":
+                    continue
+                irefs = _REF_RE.findall(iop.operands_text)
+                for pos, ref in enumerate(irefs):
+                    pm = re.match(r"param_(\d+)", ref)
+                    if not pm:
+                        continue
+                    idx = int(pm.group(1))
+                    full = (_shape_bytes(symbols.get(refs[idx], ""))
+                            if idx < len(refs) else 0.0)
+                    if iop.kind in _SLICE_KINDS:
+                        charge = min(full, 2.0 * _shape_bytes(iop.result_text))
+                    elif iop.kind == "dynamic-update-slice":
+                        # in-place accumulator: traffic = rmw of the update
+                        # window, not the whole buffer
+                        upd = (_shape_bytes(symbols.get(irefs[1], ""))
+                               if len(irefs) > 1 else 0.0)
+                        charge = min(full, 2.0 * upd) if pos == 0 else full
+                    else:
+                        charge = full
+                    param_charge[idx] = max(param_charge.get(idx, 0.0), charge)
+            reads = sum(param_charge.values())
+        else:
+            reads = sum(_shape_bytes(symbols.get(r, "")) for r in refs)
+        # a fusion containing a dynamic-update-slice as large (in ELEMENTS
+        # — the CPU backend emulates bf16 via f32 converts inside the
+        # fusion, so bytes differ) as the fusion result writes in place:
+        # produced bytes = the update window, and the aliased buffer
+        # param is charged at the update size too (on TPU this is a
+        # native in-place bf16 DUS).
+        if callee is not None and callee.ops:
+            res_elems = _shape_elems(op.result_text)
+            for iop in callee.ops:
+                if iop.kind != "dynamic-update-slice":
+                    continue
+                if _shape_elems(iop.result_text) != res_elems:
+                    continue
+                rrefs = _REF_RE.findall(iop.operands_text)
+                if len(rrefs) > 1:
+                    upd = _shape_bytes(symbols.get(rrefs[1], ""))
+                    if not upd:
+                        # interior update value: estimate from its elems
+                        # at the fusion result's per-elem width
+                        ue = _shape_elems(symbols.get(rrefs[1], ""))
+                        upd = ue and int(ue * result_b / max(res_elems, 1))
+                    if upd:
+                        result_b = min(result_b, upd)
+                        # demote the buffer param's read charge
+                        for idx, ch in list(param_charge.items()):
+                            full = (_shape_bytes(symbols.get(refs[idx], ""))
+                                    if idx < len(refs) else 0)
+                            if (idx < len(refs) and _shape_elems(
+                                    symbols.get(refs[idx], "")) == res_elems):
+                                param_charge[idx] = min(ch, 2.0 * upd)
+                        reads = sum(param_charge.values())
+                break
+        return result_b + reads
+    return result_b + _operand_bytes(op, symbols)
+
+
+def analyze_hlo(hlo: str) -> HloCosts:
+    comps, symbols = parse_computations(hlo)
+    mult = computation_multiplicities(comps)
+    out = HloCosts()
+    fusion_names: set[str] = set()
+    for c in comps.values():
+        for op in c.ops:
+            if op.kind == "fusion":
+                for callee in _CALL_ATTR_RE.findall(op.attrs_text):
+                    fusion_names.add(callee)
+    breakdown: dict[str, float] = defaultdict(float)
+    for c in comps.values():
+        m = mult.get(c.name, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = c.name in fusion_names
+        for op in c.ops:
+            if op.kind == "dot":
+                out.flops += m * _dot_flops(op, symbols)
+            elif op.kind == "convolution":
+                out.flops += m * _conv_flops(op, symbols)
+            elif op.kind == "custom-call" and "matmul" in op.attrs_text.lower():
+                out.unparsed_custom_calls += 1
+            if op.kind in COLLECTIVES:
+                b = m * _operand_bytes(op, symbols)
+                out.collective_bytes += b
+                breakdown[op.kind] += b
+            if not in_fusion:
+                out.hbm_bytes += m * _op_traffic(op, symbols, comps)
+            if op.kind == "while":
+                out.while_trips[op.name] = _while_trip_count(op, comps)
+    out.collective_breakdown = dict(breakdown)
+    return out

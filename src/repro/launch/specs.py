@@ -1,0 +1,57 @@
+"""``input_specs()`` — ShapeDtypeStruct stand-ins for every model input.
+
+No device allocation: these are fed to ``jax.jit(...).lower()`` for the
+multi-pod dry-run.  The modality frontends are stubs per the assignment,
+so VLM cells receive precomputed patch embeddings and audio cells receive
+precomputed frame embeddings as inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import get_model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                      embed_dtype=jnp.bfloat16) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {}
+    if cfg.frontend == "vit_stub":
+        batch["tokens"] = SDS((B, S - cfg.num_patches), jnp.int32)
+        batch["patch_embeds"] = SDS((B, cfg.num_patches, cfg.d_model), embed_dtype)
+    else:
+        batch["tokens"] = SDS((B, S), jnp.int32)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = SDS((B, cfg.encoder_seq_len, cfg.d_model), embed_dtype)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                        embed_dtype=jnp.bfloat16) -> dict:
+    return train_batch_specs(cfg, shape, embed_dtype)
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig,
+                 cache_dtype=jnp.bfloat16) -> dict:
+    """Inputs for serve_step: one new token + a seq_len KV/state cache."""
+    B, S = shape.global_batch, shape.seq_len
+    api = get_model(cfg)
+    cache = jax.eval_shape(
+        lambda: api.init_cache(B, S, cache_dtype))
+    return {
+        "tokens": SDS((B, 1), jnp.int32),
+        "cache": cache,
+        "cache_index": SDS((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16) -> dict:
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape, dtype)
+    if shape.kind == "prefill":
+        return prefill_batch_specs(cfg, shape, dtype)
+    return decode_specs(cfg, shape, dtype)

@@ -1,0 +1,8 @@
+"""Model library: layers + the 10 assigned architectures.
+
+Pure-functional JAX: params are plain nested dicts; every ``init_*``
+function has a paired ``axes_*`` function returning an identically
+structured tree of logical-axis tuples (see distributed/sharding.py).
+Structure equality is enforced by tests/test_models.py.
+"""
+from repro.models.registry import get_model, ModelAPI  # noqa: F401

@@ -1,0 +1,189 @@
+"""Multi-head attention with GQA, qk-norm, QKV bias, rope — covers every
+assigned attention flavour (qwen3 qk_norm, qwen1.5/internvl2 bias,
+granite/qwen GQA, whisper cross-attention, zamba2 shared blocks)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.kernels import ops as kops
+from repro.models import common
+from repro.models.rope import apply_rope
+
+
+def init_attention(kg: common.KeyGen, cfg: ArchConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    qdim, kvdim = cfg.num_heads * hd, cfg.num_kv_heads * hd
+    p = {
+        "wq": common.normal(kg(), (d, qdim), dtype),
+        "wk": common.normal(kg(), (d, kvdim), dtype),
+        "wv": common.normal(kg(), (d, kvdim), dtype),
+        "wo": common.normal(kg(), (qdim, d), dtype, std=(qdim ** -0.5) / max(cfg.num_layers, 1) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = common.zeros((qdim,), dtype)
+        p["bk"] = common.zeros((kvdim,), dtype)
+        p["bv"] = common.zeros((kvdim,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = common.ones((hd,), dtype)
+        p["k_norm"] = common.ones((hd,), dtype)
+    return p
+
+
+def axes_attention(cfg: ArchConfig) -> dict:
+    ax = {
+        "wq": ("embed", "heads_fused"),
+        "wk": ("embed", "kv_fused"),
+        "wv": ("embed", "kv_fused"),
+        "wo": ("heads_fused", "embed"),
+    }
+    if cfg.qkv_bias:
+        ax["bq"] = ("heads_fused",)
+        ax["bk"] = ("kv_fused",)
+        ax["bv"] = ("kv_fused",)
+    if cfg.qk_norm:
+        ax["q_norm"] = (None,)
+        ax["k_norm"] = (None,)
+    return ax
+
+
+def _project_qkv(p, x, xk, cfg: ArchConfig, sh: ShardingCtx):
+    hd = cfg.resolved_head_dim
+    B, S = x.shape[:2]
+    Sk = xk.shape[1]
+    q = x @ p["wq"]
+    k = xk @ p["wk"]
+    v = xk @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, Sk, cfg.num_kv_heads, hd)
+    v = v.reshape(B, Sk, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = common.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = sh(q, "batch", "seq", "act_heads", None)
+    k = sh(k, "batch", "seq", "cache_heads", None)
+    v = sh(v, "batch", "seq", "cache_heads", None)
+    return q, k, v
+
+
+def _pick_impl(seq: int) -> str:
+    # naive materializes (Sq,Sk) logits — fine for short seq, flash beyond
+    return "naive" if seq <= 1024 else "chunked"
+
+
+def apply_attention(
+    p: dict,
+    x: jax.Array,                      # (B, S, d)
+    *,
+    cfg: ArchConfig,
+    sh: ShardingCtx,
+    positions: jax.Array | None = None,  # (S,) or (B,S)
+    causal: bool = True,
+    use_rope: bool = True,
+    xk: jax.Array | None = None,         # cross-attention source
+    kv_cache: dict | None = None,        # {"k": (B,Smax,Hkv,D), "v": ...}
+    cache_index: jax.Array | None = None,  # scalar: write offset / valid len
+    attn_impl: str | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """Returns (output, updated kv_cache or None).
+
+    Modes:
+    - no cache: full (causal) attention over x (train / encoder).
+    - cache + S>=1: prefill-into-cache or single-token decode; new keys are
+      written at ``cache_index`` and attention spans the first
+      ``cache_index + S`` cache slots.
+    """
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    xk_src = x if xk is None else xk
+    q, k, v = _project_qkv(p, x, xk_src, cfg, sh)
+
+    rope_on = use_rope and cfg.pos_scheme == "rope" and xk is None
+    if rope_on:
+        if positions is None:
+            base = 0 if cache_index is None else cache_index
+            positions = base + jnp.arange(S)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None and xk is None:
+        idx = jnp.asarray(0 if cache_index is None else cache_index, jnp.int32)
+        kc = jax.lax.dynamic_update_slice(kv_cache["k"], k.astype(kv_cache["k"].dtype),
+                                          (0, idx, 0, 0))
+        vc = jax.lax.dynamic_update_slice(kv_cache["v"], v.astype(kv_cache["v"].dtype),
+                                          (0, idx, 0, 0))
+        kc = sh(kc, "batch", "cache_seq", "cache_heads", None)
+        vc = sh(vc, "batch", "cache_seq", "cache_heads", None)
+        new_cache = {"k": kc, "v": vc}
+        if S == 1:
+            out = kops.decode_attention(q, kc, vc, idx + 1)
+        else:
+            # prefill into cache: with causal masking at offset ``idx`` the
+            # not-yet-written cache tail (> idx+S) is never attended.
+            impl = attn_impl or _pick_impl(kc.shape[1])
+            if impl == "naive":
+                from repro.kernels import ref as kref
+                valid = jnp.broadcast_to(idx + S, (B,))
+                out = kref.naive_attention(q, kc, vc, causal=causal,
+                                           kv_len=valid, q_offset=idx)
+            else:
+                from repro.kernels.flash_vjp import flash_attention as flash_vjp
+                out = flash_vjp(q, kc, vc, idx, True, None, 512, 1024)
+    else:
+        impl = attn_impl or _pick_impl(max(S, xk_src.shape[1]))
+        if impl == "chunked":
+            # flash with flash-backward (O(block^2) memory both passes)
+            from repro.kernels.flash_vjp import flash_attention as flash_vjp
+            out = flash_vjp(q, k, v, 0, causal, None, 512, 1024)
+        else:
+            out = kops.flash_attention(q, k, v, causal=causal, impl=impl)
+
+    out = sh(out, "batch", "seq", "act_heads", None)
+    out = out.reshape(B, S, cfg.num_heads * hd)
+    return out @ p["wo"], new_cache
+
+
+def apply_cross_attention_cached(
+    p: dict,
+    x: jax.Array,            # (B, S, d) decoder hidden
+    cross_cache: dict,       # {"k": (B,Se,Hkv,D), "v": ...} precomputed from encoder
+    *,
+    cfg: ArchConfig,
+    sh: ShardingCtx,
+) -> jax.Array:
+    """Decode-time cross-attention: q from x, K/V from the prefill cache."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p["q_norm"], cfg.norm_eps)
+    out = kops.decode_attention(q, cross_cache["k"], cross_cache["v"],
+                                cross_cache["k"].shape[1])
+    out = out.reshape(B, S, cfg.num_heads * hd)
+    return out @ p["wo"]
+
+
+def make_cross_cache(p: dict, enc: jax.Array, cfg: ArchConfig, sh: ShardingCtx) -> dict:
+    """Precompute K/V of the encoder output for decoder cross-attention."""
+    B, Se, _ = enc.shape
+    hd = cfg.resolved_head_dim
+    k = enc @ p["wk"]
+    v = enc @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(B, Se, cfg.num_kv_heads, hd)
+    v = v.reshape(B, Se, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        k = common.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return {"k": sh(k, "batch", "seq", "cache_heads", None),
+            "v": sh(v, "batch", "seq", "cache_heads", None)}

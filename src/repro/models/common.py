@@ -1,0 +1,100 @@
+"""Shared building blocks: initializers, norms, positions, losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class KeyGen:
+    """Deterministic stream of PRNG keys (fold_in counter)."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+        self._n = 0
+
+    def __call__(self) -> jax.Array:
+        self._n += 1
+        return jax.random.fold_in(self._key, self._n)
+
+
+def normal(key, shape, dtype, std: float | None = None):
+    """Truncated-normal init; default std = 1/sqrt(fan_in)."""
+    if std is None:
+        fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+        std = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def group_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, groups: int, eps: float) -> jax.Array:
+    """GroupNorm over the last dim split into ``groups`` (RWKV head norm)."""
+    dtype = x.dtype
+    *lead, d = x.shape
+    x = x.astype(jnp.float32).reshape(*lead, groups, d // groups)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = ((x - mu) * jax.lax.rsqrt(var + eps)).reshape(*lead, d)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ------------------------------------------------------------- positions
+def sinusoidal_positions(positions: jax.Array, dim: int, dtype=jnp.float32) -> jax.Array:
+    """Transformer sinusoidal embeddings for integer ``positions`` (...,)."""
+    half = dim // 2
+    freqs = np.exp(-np.log(10000.0) * np.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ------------------------------------------------------------------ loss
+def cross_entropy_loss(
+    logits: jax.Array,  # (..., V_padded) — may be vocab-padded
+    labels: jax.Array,  # (...) int32
+    vocab_size: int,
+    mask: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Masked token-mean CE.  Padding vocab slots are excluded from the
+    normalizer by masking their logits to -inf before log_softmax."""
+    logits = logits.astype(jnp.float32)
+    v_pad = logits.shape[-1]
+    if v_pad > vocab_size:
+        neg = jnp.full((v_pad - vocab_size,), -1e30, jnp.float32)
+        logits = logits + jnp.concatenate([jnp.zeros((vocab_size,), jnp.float32), neg])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = logz - picked
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    total = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / total, total
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up

@@ -1,0 +1,117 @@
+"""Mamba2 mixer layer (zamba2 trunk): fused in-proj, causal depthwise
+conv, SSD selective-state-space scan, gated RMSNorm, out-proj."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.kernels import ops as kops
+from repro.models import common
+
+
+def conv_dim(cfg: ArchConfig) -> int:
+    return cfg.mamba_d_inner + 2 * cfg.mamba_ngroups * cfg.ssm_state
+
+
+def init_mamba2(kg: common.KeyGen, cfg: ArchConfig, dtype) -> dict:
+    d, di = cfg.d_model, cfg.mamba_d_inner
+    H, N, G, W = cfg.mamba_nheads, cfg.ssm_state, cfg.mamba_ngroups, cfg.mamba_conv_width
+    cd = conv_dim(cfg)
+    return {
+        "in_proj": common.normal(kg(), (d, 2 * di + 2 * G * N + H), dtype),
+        "conv_w": common.normal(kg(), (W, cd), dtype, std=W ** -0.5),
+        "conv_b": common.zeros((cd,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": common.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, H))).astype(jnp.float32),
+        "norm": common.ones((di,), dtype),
+        "out_proj": common.normal(kg(), (di, d), dtype,
+                                  std=(di ** -0.5) / max(cfg.num_layers, 1) ** 0.5),
+    }
+
+
+def axes_mamba2(cfg: ArchConfig) -> dict:
+    return {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": ("conv_k", "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv via static shift-sum (W is small).
+
+    xBC: (B, S, cd); conv_state: (B, W-1, cd) trailing context or None.
+    Returns (out (B,S,cd), new_state (B, W-1, cd))."""
+    W = conv_w.shape[0]
+    B, S, cd = xBC.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, W - 1, cd), xBC.dtype)
+    xp = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)  # (B, S+W-1, cd)
+    out = sum(conv_w[i] * jax.lax.slice_in_dim(xp, i, i + S, axis=1) for i in range(W))
+    out = out + conv_b
+    new_state = jax.lax.slice_in_dim(xp, S, S + W - 1, axis=1)
+    return out, new_state
+
+
+def apply_mamba2(
+    p: dict,
+    x: jax.Array,                 # (B, S, d)
+    *,
+    cfg: ArchConfig,
+    sh: ShardingCtx,
+    conv_state: jax.Array | None = None,  # (B, W-1, cd)
+    ssm_state: jax.Array | None = None,   # (B, H, P, N)
+    ssd_impl: str = "auto",
+) -> tuple[jax.Array, jax.Array | None, jax.Array | None]:
+    """Returns (out, new_conv_state, new_ssm_state); states None <=> no cache."""
+    B, S, _ = x.shape
+    di, H, N, G = cfg.mamba_d_inner, cfg.mamba_nheads, cfg.ssm_state, cfg.mamba_ngroups
+    P = cfg.mamba_head_dim
+    caching = conv_state is not None
+
+    proj = x @ p["in_proj"]
+    proj = sh(proj, "batch", "seq", "ssm_inner")
+    z, xBC, dt = jnp.split(proj, [di, 2 * di + 2 * G * N], axis=-1)
+
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"],
+                                 conv_state if caching else None)
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    xh = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if caching and S == 1:
+        # O(1) recurrent decode step
+        rep = H // G
+        bt = jnp.repeat(Bm[:, 0].astype(jnp.float32), rep, axis=1)   # (B,H,N)
+        ct = jnp.repeat(Cm[:, 0].astype(jnp.float32), rep, axis=1)
+        dtt = dt[:, 0]                                                # (B,H)
+        decay = jnp.exp(A[None] * dtt)[..., None, None]
+        h_new = decay * ssm_state + (dtt[..., None, None]
+                                     * xh[:, 0].astype(jnp.float32)[..., :, None]
+                                     * bt[..., None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", h_new, ct)
+        y = y + p["D"][None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = y[:, None].astype(x.dtype)                                # (B,1,H,P)
+        new_ssm = h_new
+    else:
+        y, new_ssm = kops.mamba2_ssd(xh, dt, A, Bm, Cm, p["D"],
+                                     state=ssm_state if caching else None,
+                                     impl=ssd_impl)
+
+    y = y.reshape(B, S, di)
+    y = common.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    y = sh(y, "batch", "seq", "ssm_inner")
+    out = y @ p["out_proj"]
+    return out, (new_conv if caching else None), (new_ssm if caching else None)

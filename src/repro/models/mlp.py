@@ -1,0 +1,44 @@
+"""Feed-forward layers: SwiGLU (llama-family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.models import common
+
+
+def init_mlp(kg: common.KeyGen, cfg: ArchConfig, dtype, kind: str = "swiglu") -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    depth_std = (f ** -0.5) / max(cfg.num_layers, 1) ** 0.5
+    if kind == "swiglu":
+        return {
+            "w_gate": common.normal(kg(), (d, f), dtype),
+            "w_up": common.normal(kg(), (d, f), dtype),
+            "w_down": common.normal(kg(), (f, d), dtype, std=depth_std),
+        }
+    return {
+        "w_in": common.normal(kg(), (d, f), dtype),
+        "b_in": common.zeros((f,), dtype),
+        "w_out": common.normal(kg(), (f, d), dtype, std=depth_std),
+        "b_out": common.zeros((d,), dtype),
+    }
+
+
+def axes_mlp(cfg: ArchConfig, kind: str = "swiglu") -> dict:
+    if kind == "swiglu":
+        return {"w_gate": ("embed", "ff"), "w_up": ("embed", "ff"),
+                "w_down": ("ff", "embed")}
+    return {"w_in": ("embed", "ff"), "b_in": ("ff",),
+            "w_out": ("ff", "embed"), "b_out": ("embed",)}
+
+
+def apply_mlp(p: dict, x: jax.Array, *, sh: ShardingCtx, kind: str = "swiglu") -> jax.Array:
+    if kind == "swiglu":
+        h = common.swiglu(x @ p["w_gate"], x @ p["w_up"])
+        h = sh(h, "batch", "seq", "act_ff")
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_in"] + p["b_in"], approximate=False)
+    h = sh(h, "batch", "seq", "act_ff")
+    return h @ p["w_out"] + p["b_out"]

@@ -1,0 +1,2 @@
+from repro.query.metadata import MetadataStore  # noqa: F401
+from repro.query.language import parse_query  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.serving.serve_step import make_serve_fns, greedy_generate  # noqa: F401

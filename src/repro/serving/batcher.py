@@ -1,0 +1,149 @@
+"""Batched model-UDF serving: iteration-level grouped batching.
+
+The query engine's Thread_3 hands entities to model UDFs; running
+prefill+decode per entity wastes the MXU.  The ``GroupBatcher`` coalesces
+queued requests into MXU-sized groups (by prompt length, so the cache
+write offsets stay uniform — the decode step takes one scalar
+cache_index), prefill runs once per group, and one ``decode_step``
+advances every sequence in the group per iteration.  Requests that hit
+EOS/max_tokens are marked done immediately (their slots idle until the
+group drains, then the next group is admitted — iteration-level, not
+token-level, admission; the difference vs. vLLM-style slot reuse is
+documented and the engine never blocks on it because groups are small).
+
+Throughput accounting (`tokens_out / steps_run`) is what
+benchmarks/serving_bench.py reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from collections import defaultdict
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingCtx
+from repro.models.registry import ModelAPI
+from repro.serving.serve_step import sample_token
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # (prompt_len,)
+    max_new: int = 16
+    eos_id: int = -1              # -1: never
+    out: list = dataclasses.field(default_factory=list)
+    done_event: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+
+    def result(self, timeout=None) -> np.ndarray:
+        self.done_event.wait(timeout)
+        return np.asarray(self.out, np.int32)
+
+
+class GroupBatcher:
+    def __init__(self, model: ModelAPI, params, *, group_size: int = 8,
+                 max_new_default: int = 16, sh: ShardingCtx | None = None,
+                 temperature: float = 0.0, cache_dtype=jnp.float32):
+        self.model = model
+        self.params = params
+        self.sh = sh or ShardingCtx(mesh=None)
+        self.group_size = group_size
+        self.max_new_default = max_new_default
+        self.temperature = temperature
+        self.cache_dtype = cache_dtype
+        self.waiting: "queue.Queue[Request]" = queue.Queue()
+        self._rid = 0
+        self._lock = threading.Lock()
+        self._decode_jit = jax.jit(
+            lambda p, t, c, i: model.decode_step(p, t, c, i, self.sh),
+            donate_argnums=(2,))
+        self.steps_run = 0
+        self.tokens_out = 0
+        self.groups_run = 0
+
+    def submit(self, tokens, max_new: int | None = None, eos_id=-1) -> Request:
+        with self._lock:
+            self._rid += 1
+            req = Request(self._rid, np.asarray(tokens, np.int32),
+                          max_new or self.max_new_default, eos_id)
+        self.waiting.put(req)
+        return req
+
+    def run_until_idle(self):
+        while True:
+            group = self._next_group()
+            if not group:
+                return
+            self._run_group(group)
+
+    # ------------------------------------------------------------------
+    def _next_group(self) -> list[Request]:
+        """Pull up to group_size same-prompt-length requests."""
+        by_len: dict[int, list[Request]] = defaultdict(list)
+        leftovers = []
+        group: list[Request] = []
+        while len(group) < self.group_size:
+            try:
+                r = self.waiting.get_nowait()
+            except queue.Empty:
+                break
+            L = len(r.tokens)
+            if not group or L == len(group[0].tokens):
+                group.append(r)
+            else:
+                leftovers.append(r)
+        for r in leftovers:
+            self.waiting.put(r)
+        return group
+
+    def _run_group(self, group: list[Request]):
+        cfg = self.model.cfg
+        n = len(group)
+        prompt_len = len(group[0].tokens)
+        max_new = max(r.max_new for r in group)
+        P = cfg.num_patches if cfg.frontend == "vit_stub" else 0
+        max_cache = P + prompt_len + max_new + 1
+
+        toks = np.stack([r.tokens for r in group])
+        batch = {"tokens": jnp.asarray(toks)}
+        if P:
+            batch["patch_embeds"] = jnp.zeros((n, P, cfg.d_model),
+                                              jnp.float32)
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jnp.zeros((n, cfg.encoder_seq_len, cfg.d_model),
+                                        jnp.float32)
+        logits, cache = self.model.prefill(self.params, batch, self.sh,
+                                           max_cache,
+                                           cache_dtype=self.cache_dtype)
+        live = np.ones(n, bool)
+        tok = sample_token(logits, jax.random.PRNGKey(self.groups_run),
+                           self.temperature, cfg.vocab_size)
+        idx = jnp.asarray(P + prompt_len, jnp.int32)
+        for step in range(max_new):
+            tok_np = np.asarray(tok)
+            for i, r in enumerate(group):
+                if not live[i]:
+                    continue
+                t = int(tok_np[i, 0])
+                r.out.append(t)
+                self.tokens_out += 1
+                if t == r.eos_id or len(r.out) >= r.max_new:
+                    live[i] = False
+                    r.done_event.set()
+            if not live.any() or step == max_new - 1:
+                break
+            logits, cache = self._decode_jit(self.params, tok, cache, idx + step)
+            self.steps_run += 1
+            tok = sample_token(
+                logits, jax.random.fold_in(jax.random.PRNGKey(self.groups_run),
+                                           step), self.temperature,
+                cfg.vocab_size)
+        for r in group:
+            r.done_event.set()
+        self.groups_run += 1

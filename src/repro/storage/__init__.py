@@ -1,0 +1,1 @@
+from repro.storage.store import BlobStore  # noqa: F401

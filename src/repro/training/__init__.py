@@ -1,0 +1,2 @@
+from repro.training.optimizer import TrainConfig, lr_schedule  # noqa: F401
+from repro.training.train_step import make_train_step, init_train_state  # noqa: F401

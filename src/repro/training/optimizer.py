@@ -1,0 +1,106 @@
+"""AdamW + LR schedules (incl. the WSD schedule MiniCPM was trained with).
+
+Pure-JAX implementation (no optax dependency): moments are plain pytrees
+mirroring the params, all math in f32 regardless of param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "wsd"          # wsd | cosine | linear | constant
+    wsd_decay_frac: float = 0.1    # final fraction of steps in the decay phase
+    min_lr_ratio: float = 0.1
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    clip_norm: float = 1.0
+    compute_dtype: str = "bfloat16"   # forward/backward dtype; master is f32
+    remat: bool = True
+    grad_reduce_dtype: str = "bfloat16"  # dtype of the DP gradient all-reduce
+    # gradient accumulation: number of sequential microbatches per step.
+    # Bounds the remat activation stack (per-layer saved inputs) to
+    # B/microbatches sequences; required for the deep/wide archs at
+    # train_4k (64L x d5120 would otherwise stack ~40 GB of residuals).
+    microbatches: int = 1
+
+
+def lr_schedule(cfg: TrainConfig):
+    peak, total, warm = cfg.learning_rate, cfg.total_steps, cfg.warmup_steps
+    floor = peak * cfg.min_lr_ratio
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm_lr = peak * jnp.minimum(step / jnp.maximum(warm, 1), 1.0)
+        if cfg.schedule == "constant":
+            return warm_lr
+        if cfg.schedule == "linear":
+            frac = jnp.clip((step - warm) / jnp.maximum(total - warm, 1), 0, 1)
+            return jnp.where(step < warm, warm_lr, peak + frac * (floor - peak))
+        if cfg.schedule == "cosine":
+            frac = jnp.clip((step - warm) / jnp.maximum(total - warm, 1), 0, 1)
+            cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+            return jnp.where(step < warm, warm_lr, cos)
+        # WSD (warmup-stable-decay): stable at peak, then sqrt-style decay tail
+        decay_steps = max(int(total * cfg.wsd_decay_frac), 1)
+        decay_start = total - decay_steps
+        frac = jnp.clip((step - decay_start) / decay_steps, 0, 1)
+        dec = peak + frac * (floor - peak)
+        return jnp.where(step < warm, warm_lr,
+                         jnp.where(step < decay_start, peak, dec))
+
+    return sched
+
+
+def init_moments(params) -> tuple[Any, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return jax.tree.map(zeros, params), jax.tree.map(zeros, params)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, m, v, step, cfg: TrainConfig, lr):
+    """One AdamW step; returns (new_params, new_m, new_v).
+
+    ``step`` is the 1-based step index (f32/int). Weight decay is decoupled
+    and skipped for 1-D params (norms, biases) per common practice.
+    """
+    b1, b2 = cfg.b1, cfg.b2
+    step = jnp.asarray(step, jnp.float32)
+    c1 = 1 - b1 ** step
+    c2 = 1 - b2 ** step
+
+    def upd(p, g, m_, v_):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m_ + (1 - b1) * g
+        v_new = b2 * v_ + (1 - b2) * jnp.square(g)
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2 and cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(m)
+    flat_v = tdef.flatten_up_to(v)
+    out = [upd(*args) for args in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, new_m, new_v

@@ -1,0 +1,1 @@
+from repro.visual.ops import NATIVE_OPS, apply_native_op  # noqa: F401

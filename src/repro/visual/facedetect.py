@@ -1,0 +1,90 @@
+"""Toy face detector + the compound vision UDFs (Box/Mask/Manipulation,
+ActivityRecognition).
+
+The detector is a deliberately lightweight heuristic (skin-tone prior +
+local-variance saliency, argmax over a coarse grid) — the paper treats
+face detection as an opaque compute-intensive remote UDF, and what the
+system cares about is its *cost and position in the pipeline*, not its
+mAP.  The interface matches a real model server: image in, box out.
+ML-model UDFs backed by the assigned architectures are registered via
+repro.core.udf (see examples/serve_visual_queries.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.visual import ops as vops
+
+
+def detect_face(img) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (cx, cy, r) of the most face-like region (traced ints)."""
+    H, W, _ = img.shape
+    r, g, b = img[..., 0], img[..., 1], img[..., 2]
+    skin = (r > g) & (g > b * 0.8) & (r > 0.25) & (r < 0.95)
+    gray = jnp.mean(img, axis=-1)
+    # local variance via 2-level box downsampling
+    coarse = jax.image.resize(gray, (max(H // 8, 1), max(W // 8, 1)), "linear")
+    up = jax.image.resize(coarse, (H, W), "linear")
+    saliency = jnp.abs(gray - up)
+    score = saliency * (0.5 + 0.5 * skin.astype(jnp.float32))
+    sc = jax.image.resize(score, (max(H // 16, 1), max(W // 16, 1)), "linear")
+    idx = jnp.argmax(sc)
+    cy = (idx // sc.shape[1]) * 16 + 8
+    cx = (idx % sc.shape[1]) * 16 + 8
+    rad = jnp.asarray(min(H, W) // 4, jnp.int32)
+    return cx.astype(jnp.int32), cy.astype(jnp.int32), rad
+
+
+def _dyn_box(img, cx, cy, r, thickness=2):
+    H, W, _ = img.shape
+    ys = jnp.arange(H)[:, None]
+    xs = jnp.arange(W)[None, :]
+    x0, y0 = cx - r, cy - r
+    x1, y1 = cx + r, cy + r
+    inside = (ys >= y0) & (ys < y1) & (xs >= x0) & (xs < x1)
+    inner = ((ys >= y0 + thickness) & (ys < y1 - thickness)
+             & (xs >= x0 + thickness) & (xs < x1 - thickness))
+    border = inside & ~inner
+    col = jnp.asarray([0.0, 1.0, 0.0], img.dtype)
+    return jnp.where(border[..., None], col, img)
+
+
+def _dyn_circle(img, cx, cy, r, keep_inside=True):
+    H, W, _ = img.shape
+    ys = jnp.arange(H)[:, None].astype(jnp.float32)
+    xs = jnp.arange(W)[None, :].astype(jnp.float32)
+    d2 = (ys - cy.astype(jnp.float32)) ** 2 + (xs - cx.astype(jnp.float32)) ** 2
+    inside = d2 <= r.astype(jnp.float32) ** 2
+    keep = inside if keep_inside else ~inside
+    return jnp.where(keep[..., None], img, 0.0).astype(img.dtype)
+
+
+# ------------------------------------------------------- compound UDFs
+def facedetect_box(img, **_):
+    """IQ4/VQ4: detect a face and draw a box around it."""
+    cx, cy, r = detect_face(img)
+    return _dyn_box(img, cx, cy, r)
+
+
+def facedetect_mask(img, *, r: int | None = None, **_):
+    """IQ5/VQ5: black circular mask of radius r over the face centre."""
+    cx, cy, rr = detect_face(img)
+    rad = jnp.asarray(r, jnp.int32) if r is not None else rr
+    return _dyn_circle(img, cx, cy, rad, keep_inside=False)
+
+
+def facedetect_manipulation(img, **_):
+    """IQ9/VQ9: keep only the face disk, black out everything else."""
+    cx, cy, r = detect_face(img)
+    return _dyn_circle(img, cx, cy, r, keep_inside=True)
+
+
+def activity_recognition(img, *, labels=("WALK", "RUN", "JUMP", "SIT"), **_):
+    """VQ8 stub classifier: coarse feature hash -> label, stamped on frame.
+    A real model UDF (assigned-arch LM) can be registered instead via
+    repro.core.udf.register_udf."""
+    feats = jnp.stack([img.mean(), img.std(), img[..., 0].mean(), img[..., 2].std()])
+    idx = int(jax.device_get((jnp.abs(feats * 997).sum() % len(labels)).astype(jnp.int32)))
+    from repro.visual.font import draw_text
+    return draw_text(img, labels[idx], 4, 4)

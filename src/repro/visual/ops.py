@@ -1,0 +1,116 @@
+"""Native visual operations (the paper's OpenCV-equivalent set), in JAX.
+
+Each op takes (img (H,W,3) float32 in [0,1], **params) and returns an
+image.  Ops are pure functions; the pipeline layer jit-compiles fused
+chains per (chain, shape) signature.  The Gaussian blur routes through
+the Pallas kernel wrapper (reference path on CPU).
+
+Covers IQ1-IQ9 / VQ1-VQ9 from the paper's benchmark suite.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.visual.font import draw_text
+
+
+# ----------------------------------------------------------------- ops
+def crop(img, *, x: int, y: int, width: int, height: int):
+    return jax.lax.dynamic_slice(img, (y, x, 0),
+                                 (min(height, img.shape[0]),
+                                  min(width, img.shape[1]), img.shape[2]))
+
+
+def resize(img, *, width: int, height: int, method: str = "bilinear"):
+    return jax.image.resize(img, (height, width, img.shape[2]), method=method)
+
+
+def rotate(img, *, k: int = 1):
+    """Rotate by k*90 degrees counterclockwise."""
+    return jnp.rot90(img, k=k % 4, axes=(0, 1))
+
+
+def flip(img, *, axis: str = "horizontal"):
+    return img[:, ::-1] if axis == "horizontal" else img[::-1]
+
+
+def grayscale(img):
+    w = jnp.asarray([0.299, 0.587, 0.114], img.dtype)
+    g = jnp.tensordot(img, w, axes=([-1], [0]))
+    return jnp.repeat(g[..., None], img.shape[-1], axis=-1)
+
+
+def blur(img, *, ksize: int = 5, sigma_x: float = 0.0, sigma_y: float = 0.0):
+    return kops.gaussian_blur(img, ksize, sigma_x, sigma_y or None)
+
+
+def threshold(img, *, value: float = 0.5, max_value: float = 1.0):
+    return jnp.where(img > value, max_value, 0.0).astype(img.dtype)
+
+
+def upsample(img, *, fx: float = 2.0, fy: float = 2.0):
+    H, W, C = img.shape
+    return jax.image.resize(img, (int(H * fy), int(W * fx), C), "bilinear")
+
+
+def downsample(img, *, fx: float = 2.0, fy: float = 2.0):
+    H, W, C = img.shape
+    return jax.image.resize(img, (max(int(H / fy), 1), max(int(W / fx), 1), C),
+                            "bilinear")
+
+
+def caption(img, *, text: str = "", x: int = 4, y: int = 4,
+            intensity: float = 1.0):
+    return draw_text(img, text, x, y, intensity)
+
+
+def box(img, *, x: int, y: int, width: int, height: int,
+        thickness: int = 2, color=(0.0, 1.0, 0.0)):
+    """Draw a rectangle outline (used by the face-detect pipeline)."""
+    H, W, _ = img.shape
+    ys = jnp.arange(H)[:, None]
+    xs = jnp.arange(W)[None, :]
+    inside = (ys >= y) & (ys < y + height) & (xs >= x) & (xs < x + width)
+    inner = ((ys >= y + thickness) & (ys < y + height - thickness)
+             & (xs >= x + thickness) & (xs < x + width - thickness))
+    border = inside & ~inner
+    col = jnp.asarray(color, img.dtype)
+    return jnp.where(border[..., None], col, img)
+
+
+def circle_mask(img, *, cx: int, cy: int, r: int, keep_inside: bool = True):
+    """Circular mask centred at (cx, cy): blacks out the other region."""
+    H, W, _ = img.shape
+    ys = jnp.arange(H)[:, None].astype(jnp.float32)
+    xs = jnp.arange(W)[None, :].astype(jnp.float32)
+    d2 = (ys - cy) ** 2 + (xs - cx) ** 2
+    inside = d2 <= float(r) ** 2
+    keep = inside if keep_inside else ~inside
+    return jnp.where(keep[..., None], img, 0.0).astype(img.dtype)
+
+
+NATIVE_OPS = {
+    "crop": crop,
+    "resize": resize,
+    "rotate": rotate,
+    "flip": flip,
+    "grayscale": grayscale,
+    "blur": blur,
+    "threshold": threshold,
+    "upsample": upsample,
+    "downsample": downsample,
+    "caption": caption,
+    "box": box,
+    "circle_mask": circle_mask,
+}
+
+
+def apply_native_op(name: str, img, params: dict):
+    if name not in NATIVE_OPS:
+        raise KeyError(f"unknown native op {name!r}; have {sorted(NATIVE_OPS)}")
+    return NATIVE_OPS[name](img, **params)

@@ -1,0 +1,175 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.engine import VDMSAsyncEngine
+from repro.core.remote import TransportModel
+from repro.query.metadata import MetadataStore, _OPS
+
+SET = settings(max_examples=25, deadline=None,
+               suppress_health_check=[HealthCheck.too_slow,
+                                      HealthCheck.data_too_large])
+
+# ------------------------------------------------------ metadata store
+props_st = st.fixed_dictionaries({
+    "category": st.sampled_from(["a", "b", "c"]),
+    "age": st.integers(0, 80),
+    "score": st.floats(0, 1, allow_nan=False),
+})
+
+
+@SET
+@given(st.lists(props_st, min_size=0, max_size=30),
+       st.sampled_from(["==", ">=", "<", "!="]),
+       st.integers(0, 80))
+def test_metadata_find_matches_bruteforce(items, op, val):
+    store = MetadataStore()
+    for p in items:
+        store.add("image", p)
+    got = store.find("image", {"age": [op, val]})
+    want = [eid for eid in store.find("image")
+            if _OPS[op](store.get(eid).get("age"), val)]
+    assert sorted(got) == sorted(want)
+
+
+@SET
+@given(st.lists(props_st, min_size=0, max_size=25),
+       st.integers(10, 40), st.integers(40, 70))
+def test_metadata_conjunctive_range(items, lo, hi):
+    store = MetadataStore()
+    for p in items:
+        store.add("image", p)
+    got = store.find("image", {"age": [">=", lo, "<=", hi],
+                               "category": ["==", "a"]})
+    for eid in got:
+        p = store.get(eid)
+        assert lo <= p["age"] <= hi and p["category"] == "a"
+    n_true = sum(1 for p in items
+                 if lo <= p["age"] <= hi and p["category"] == "a")
+    assert len(got) == n_true
+
+
+# --------------------------------------------- engine: no loss, no dup
+@SET
+@given(st.integers(1, 12), st.integers(1, 4),
+       st.lists(st.sampled_from(["grayscale", "threshold", "REMOTE"]),
+                min_size=1, max_size=5))
+def test_engine_processes_every_entity_exactly_once(n_entities, n_servers, opnames):
+    eng = VDMSAsyncEngine(
+        num_remote_servers=n_servers,
+        transport=TransportModel(network_latency_s=0.0005, service_time_s=0.001))
+    try:
+        rng = np.random.default_rng(n_entities)
+        for i in range(n_entities):
+            eng.add_entity("image", rng.uniform(0, 1, (8, 8, 3)).astype(np.float32),
+                           {"category": "t", "idx": i})
+        ops = []
+        for o in opnames:
+            if o == "REMOTE":
+                ops.append({"type": "remote", "url": "u",
+                            "options": {"id": "grayscale"}})
+            elif o == "threshold":
+                ops.append({"type": "threshold", "value": 0.5})
+            else:
+                ops.append({"type": o})
+        res = eng.execute([{"FindImage": {
+            "constraints": {"category": ["==", "t"]}, "operations": ops}}],
+            timeout=60)
+        assert res["stats"]["matched"] == n_entities
+        assert len(res["entities"]) == n_entities       # no loss, no dup
+        assert res["stats"]["failed"] == 0
+        # ERD saw every entity reach the end of its pipeline
+        for eid in res["entities"]:
+            rec = eng.erd.get(eid)
+            assert rec is not None and rec["op_index"] == len(ops)
+    finally:
+        eng.shutdown()
+
+
+# ------------------------------------------------------- checkpointing
+tree_st = st.recursive(
+    st.tuples(st.integers(1, 4), st.integers(1, 4)),
+    lambda children: st.dictionaries(
+        st.sampled_from(["a", "b", "c", "d"]), children, min_size=1, max_size=3),
+    max_leaves=6)
+
+
+@SET
+@given(tree_st, st.integers(0, 1000))
+def test_checkpoint_roundtrip(tree_shape, step):
+    import tempfile
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+    rng = np.random.default_rng(step)
+
+    def build(node):
+        if isinstance(node, dict):
+            return {k: build(v) for k, v in node.items()}
+        return jnp.asarray(rng.uniform(size=node).astype(np.float32))
+
+    if not isinstance(tree_shape, dict):
+        tree_shape = {"root": tree_shape}
+    tree = build(tree_shape)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, step, tree)
+        restored, got_step = restore_checkpoint(d, tree)
+        assert got_step == step
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------ lr schedules
+@SET
+@given(st.integers(10, 50), st.integers(100, 400),
+       st.sampled_from(["wsd", "cosine", "linear"]))
+def test_lr_schedule_properties(warmup, total, kind):
+    import jax.numpy as jnp
+    from repro.training.optimizer import TrainConfig, lr_schedule
+
+    cfg = TrainConfig(learning_rate=1e-3, warmup_steps=warmup,
+                      total_steps=total, schedule=kind)
+    sched = lr_schedule(cfg)
+    lrs = np.array([float(sched(s)) for s in range(0, total + 1, 5)])
+    assert lrs.max() <= 1e-3 + 1e-9
+    assert lrs.min() >= 0
+    assert float(sched(total)) <= float(sched(warmup)) + 1e-9  # decays by end
+    if kind == "wsd":
+        mid = (warmup + int(total * 0.9)) // 2
+        np.testing.assert_allclose(float(sched(mid)), 1e-3, rtol=1e-6)
+
+
+# -------------------------------------------------- int8 EF compression
+@SET
+@given(st.integers(1, 64), st.floats(0.01, 100.0, allow_nan=False))
+def test_error_feedback_bounded_residual(n, scale):
+    import jax.numpy as jnp
+    from repro.distributed.compression import ErrorFeedback, _quantize_int8
+
+    rng = np.random.default_rng(n)
+    g = {"w": jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)}
+    ef = ErrorFeedback.init(g)
+    sent, ef2 = ErrorFeedback.apply(g, ef)
+    # residual magnitude bounded by one quantization bucket
+    amax = float(jnp.abs(g["w"]).max()) + 1e-12
+    assert float(jnp.abs(ef2["w"]).max()) <= amax / 127.0 + 1e-6
+    # invariant: sent + residual == grad
+    np.testing.assert_allclose(np.asarray(sent["w"] + ef2["w"]),
+                               np.asarray(g["w"]), rtol=1e-5, atol=1e-6)
+
+
+# -------------------------------------------------- sharding rules
+@SET
+@given(st.integers(1, 64), st.integers(1, 64))
+def test_safe_spec_divisibility(dim0, dim1):
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import default_rules, safe_spec
+
+    if jax.device_count() != 1:
+        pytest.skip("single-device test")
+    mesh = jax.make_mesh((1,), ("model",))
+    spec = safe_spec((dim0, dim1), ("embed", "ff"), default_rules(), mesh)
+    assert isinstance(spec, P)  # 1-device mesh: everything divides

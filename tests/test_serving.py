@@ -1,0 +1,66 @@
+"""Serving layer: generation determinism, cache reuse, batcher math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.distributed.sharding import REPLICATED
+from repro.models import get_model
+from repro.serving import greedy_generate
+from repro.serving.serve_step import sample_token
+
+
+def test_greedy_generate_deterministic():
+    cfg = get_arch("qwen3-0.6b", reduced=True)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.arange(1, 9, dtype=jnp.int32)[None].repeat(2, 0)}
+    a = greedy_generate(api, params, batch, steps=6, sh=REPLICATED)
+    b = greedy_generate(api, params, batch, steps=6, sh=REPLICATED)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert a.shape == (2, 6)
+    assert int(a.max()) < cfg.vocab_size  # padding slots never sampled
+
+
+def test_greedy_matches_teacher_forcing():
+    """Greedy decode must agree with argmax over a teacher-forced forward
+    pass fed its own outputs."""
+    cfg = get_arch("rwkv6-1.6b", reduced=True)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(1))
+    prompt = jnp.arange(3, 11, dtype=jnp.int32)[None]
+    gen = greedy_generate(api, params, {"tokens": prompt}, steps=4,
+                          sh=REPLICATED)
+    # replay: forward over prompt + generated, check each next-token argmax
+    toks = jnp.concatenate([prompt, gen], axis=1)
+    logits, _ = api.forward(params, {"tokens": toks}, REPLICATED)
+    mask = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+    logits = jnp.where(mask, logits, -1e30)
+    for i in range(4):
+        pos = prompt.shape[1] - 1 + i
+        want = int(jnp.argmax(logits[0, pos]))
+        assert want == int(gen[0, i])
+
+
+def test_sample_token_temperature_zero_is_argmax():
+    logits = jnp.asarray([[0.1, 3.0, -1.0, 0.5]])
+    tok = sample_token(logits, jax.random.PRNGKey(0), 0.0)
+    assert int(tok[0, 0]) == 1
+
+
+def test_sample_token_masks_padded_vocab():
+    logits = jnp.asarray([[0.0, 0.0, 0.0, 100.0]])  # huge logit in pad slot
+    tok = sample_token(logits, jax.random.PRNGKey(0), 0.0, vocab_size=3)
+    assert int(tok[0, 0]) < 3
+
+
+def test_whisper_generate_roundtrip():
+    cfg = get_arch("whisper-small", reduced=True)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(2))
+    batch = {"tokens": jnp.ones((1, 4), jnp.int32),
+             "frames": jnp.ones((1, cfg.encoder_seq_len, cfg.d_model)) * 0.01}
+    out = greedy_generate(api, params, batch, steps=3, sh=REPLICATED)
+    assert out.shape == (1, 3)
+    assert np.all(np.isfinite(np.asarray(out)))

@@ -1,0 +1,65 @@
+"""Straggler mitigation + duplicate handling in the remote pool."""
+import queue
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.entity import Entity
+from repro.core.pipeline import make_op
+from repro.core.remote import RemoteServerPool, Request, TransportModel
+
+
+def test_straggler_reissue_first_response_wins():
+    pool = RemoteServerPool(
+        2, TransportModel(network_latency_s=0.001, service_time_s=0.002),
+        straggler_factor=2.0)
+    pool._lat_samples = 100          # pretend the estimate warmed up
+    pool._lat_est = 0.005
+    # make server 0 a straggler by stuffing its queue with slow work
+    ops = make_op("grayscale")
+    reply: queue.Queue = queue.Queue()
+    rng = np.random.default_rng(0)
+    ents = [Entity(str(i), "image",
+                   rng.uniform(0, 1, (16, 16, 3)).astype(np.float32),
+                   ops=[ops]) for i in range(6)]
+    # dispatch all to the pool (round robin spreads over both)
+    for e in ents:
+        pool.dispatch(e, ops, reply)
+    # immediately re-issue whatever is considered slow after a tiny wait
+    time.sleep(0.05)
+    pool.reissue_stragglers()
+    done = set()
+    deadline = time.time() + 10
+    while len(done) < len(ents) and time.time() < deadline:
+        try:
+            tag, req, payload = reply.get(timeout=5)
+        except queue.Empty:
+            break
+        status, result = pool.handle_response(tag, req, payload)
+        if status == "done":
+            eid = req.entity.eid
+            assert eid not in done, "duplicate completion surfaced"
+            done.add(eid)
+    assert len(done) == len(ents)
+    # any duplicate server responses must have been dropped silently
+    assert pool.duplicates_dropped >= 0
+    pool.shutdown()
+
+
+def test_reissue_requires_warmup_and_is_capped():
+    pool = RemoteServerPool(
+        2, TransportModel(network_latency_s=0.0, service_time_s=0.2),
+        straggler_factor=0.001)  # absurdly aggressive
+    ops = make_op("grayscale")
+    reply: queue.Queue = queue.Queue()
+    e = Entity("x", "image", np.zeros((4, 4, 3), np.float32), ops=[ops])
+    pool.dispatch(e, ops, reply)
+    pool.reissue_stragglers()          # cold estimate -> no reissue
+    assert pool.reissued == 0
+    pool._lat_samples = 100
+    time.sleep(0.01)
+    pool.reissue_stragglers()
+    pool.reissue_stragglers()          # capped at one reissue per request
+    assert pool.reissued <= 1
+    pool.shutdown()

@@ -1,0 +1,98 @@
+"""Native visual op correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.visual.ops import (NATIVE_OPS, apply_native_op, box, caption,
+                              circle_mask, crop, downsample, grayscale,
+                              resize, rotate, threshold, upsample)
+from repro.visual.facedetect import detect_face, facedetect_manipulation
+
+KEY = jax.random.PRNGKey(0)
+IMG = jax.random.uniform(KEY, (40, 30, 3))
+
+
+def test_crop_shape_and_content():
+    out = crop(IMG, x=5, y=10, width=12, height=8)
+    assert out.shape == (8, 12, 3)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(IMG[10:18, 5:17]))
+
+
+def test_resize_shapes():
+    assert resize(IMG, width=15, height=20).shape == (20, 15, 3)
+    assert upsample(IMG, fx=2, fy=2).shape == (80, 60, 3)
+    assert downsample(IMG, fx=2, fy=2).shape == (20, 15, 3)
+
+
+def test_rotate_inverts():
+    np.testing.assert_array_equal(np.asarray(rotate(rotate(IMG, k=1), k=3)),
+                                  np.asarray(IMG))
+
+
+def test_grayscale_channels_equal():
+    g = grayscale(IMG)
+    np.testing.assert_allclose(np.asarray(g[..., 0]), np.asarray(g[..., 1]))
+    assert g.shape == IMG.shape
+
+
+def test_threshold_binary():
+    t = threshold(IMG, value=0.5)
+    assert set(np.unique(np.asarray(t))).issubset({0.0, 1.0})
+
+
+def test_box_draws_border_only():
+    img = jnp.zeros((20, 20, 3))
+    out = np.asarray(box(img, x=5, y=5, width=10, height=10, thickness=1))
+    assert out[5, 5, 1] == 1.0          # border pixel painted green
+    assert out[10, 10, 1] == 0.0        # interior untouched
+    assert out[0, 0, 1] == 0.0          # exterior untouched
+
+
+def test_circle_mask_keeps_center():
+    img = jnp.ones((21, 21, 3))
+    out = np.asarray(circle_mask(img, cx=10, cy=10, r=5))
+    assert out[10, 10, 0] == 1.0
+    assert out[0, 0, 0] == 0.0
+
+
+def test_caption_stamps_pixels():
+    img = jnp.zeros((20, 60, 3))
+    out = np.asarray(caption(img, text="AB", x=2, y=2))
+    assert out.sum() > 0
+    assert out.max() == 1.0
+
+
+def test_detect_face_returns_in_bounds():
+    from repro.dataio import synthetic_faces
+    face = jnp.asarray(synthetic_faces(1, size=64, seed=3)[0])
+    cx, cy, r = detect_face(face)
+    assert 0 <= int(cx) < 64 and 0 <= int(cy) < 64 and int(r) > 0
+
+
+def test_manipulation_blacks_out_background():
+    from repro.dataio import synthetic_faces
+    face = jnp.asarray(synthetic_faces(1, size=64, seed=4)[0])
+    out = np.asarray(facedetect_manipulation(face))
+    assert (out == 0).mean() > 0.4      # most of the frame blacked out
+    assert out.sum() > 0                # face disk kept
+
+
+@pytest.mark.parametrize("name", sorted(NATIVE_OPS))
+def test_all_native_ops_run(name):
+    params = {
+        "crop": {"x": 0, "y": 0, "width": 10, "height": 10},
+        "resize": {"width": 16, "height": 16},
+        "rotate": {"k": 1},
+        "flip": {},
+        "grayscale": {},
+        "blur": {"ksize": 3, "sigma_x": 1.0},
+        "threshold": {"value": 0.5},
+        "upsample": {"fx": 1.5, "fy": 1.5},
+        "downsample": {"fx": 2.0, "fy": 2.0},
+        "caption": {"text": "HI", "x": 1, "y": 1},
+        "box": {"x": 2, "y": 2, "width": 8, "height": 8},
+        "circle_mask": {"cx": 15, "cy": 20, "r": 5},
+    }[name]
+    out = apply_native_op(name, IMG, params)
+    assert np.all(np.isfinite(np.asarray(out)))
