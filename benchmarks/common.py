@@ -100,10 +100,15 @@ def video_c2_pipeline() -> list[dict]:
 
 # -------------------------------------------------------------- systems
 def run_async_engine(data, ops_json, *, servers=2, clients=1, video=False,
-                     fuse=False, batch_remote=1, transport=None) -> dict:
+                     fuse=False, batch_remote=1, transport=None,
+                     num_native_workers=1) -> dict:
+    # num_native_workers=1 + FIFO Queue_1 keep the paper-faithful single
+    # Thread_2 so the architecture comparison stays apples-to-apples.
     eng = VDMSAsyncEngine(num_remote_servers=servers,
                           transport=transport or TRANSPORT,
-                          fuse_native=fuse, batch_remote=batch_remote)
+                          fuse_native=fuse, batch_remote=batch_remote,
+                          num_native_workers=num_native_workers,
+                          fair_scheduling=num_native_workers != 1)
     try:
         kind = "video" if video else "image"
         for i, item in enumerate(data):

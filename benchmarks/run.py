@@ -20,7 +20,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="image|video|cputrace|scaleout|roofline|fusion")
+                    help="image|video|cputrace|scaleout|roofline|fusion|"
+                         "serving|native_pool")
     args = ap.parse_args()
 
     from benchmarks import cpu_trace, image_suite, scaleout, video_suite
@@ -49,6 +50,9 @@ def main() -> None:
     suites["cputrace"] = lambda: cpu_trace.run()
     from benchmarks import serving_bench
     suites["serving"] = lambda: serving_bench.run()
+    suites["native_pool"] = lambda: serving_bench.run_native_pool(
+        n_images=48 if args.full else 24,
+        sessions=4 if args.full else 2)
     suites["fusion"] = lambda: (
         image_suite.run_c2(16, fuse=False)
         + [dict(r, name=r["name"] + "_fused")

@@ -27,8 +27,11 @@ def run(kappas=(1, 2, 4, 8, 16, 32, 64), n_images=96, clients=4):
     ops = [{"type": "remote", "url": "u", "options": {"id": "facedetect_box"}}]
     times = {}
     for k in kappas:
+        # single Thread_2 + FIFO Queue_1: paper-faithful baseline so
+        # T(1)/T(kappa) isolates remote scale-out, as in Fig 29
         eng = VDMSAsyncEngine(num_remote_servers=k, transport=SCALE_TRANSPORT,
-                              dispatch_policy="least_loaded")
+                              dispatch_policy="least_loaded",
+                              num_native_workers=1, fair_scheduling=False)
         try:
             for i, img in enumerate(data):
                 eng.add_entity("image", img, {"category": "s", "idx": i})

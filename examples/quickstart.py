@@ -1,5 +1,6 @@
 """Quickstart: stand up VDMS-Async, ingest images, run a mixed
-native/remote operation pipeline, inspect results.
+native/remote operation pipeline — blocking and as an async session
+with per-entity streaming — then inspect results.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -51,6 +52,15 @@ def main():
         print(f"output entity shape: {np.asarray(some).shape} "
               f"(values in {{0,1}} after threshold: "
               f"{sorted(np.unique(np.asarray(some)))[:4]})")
+
+        # the same query as an async session: submit() returns a future
+        # immediately; entities stream back as their pipelines finish
+        streamed = []
+        future = engine.submit(query, on_entity=lambda e: streamed.append(e.eid))
+        print(f"submitted query {future.query_id}; doing other work ...")
+        res2 = future.result(timeout=120)
+        print(f"session {future.query_id} done: {len(res2['entities'])} "
+              f"entities, {len(streamed)} streamed callbacks")
         print("engine utilization:", engine.utilization())
     finally:
         engine.shutdown()

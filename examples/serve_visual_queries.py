@@ -43,9 +43,15 @@ def main():
             ]}}]
 
         t0 = time.time()
-        res = engine.execute(query, timeout=600)
-        print(f"processed {len(res['entities'])} clips in {time.time()-t0:.1f}s "
-              f"(failed={res['stats']['failed']})")
+        # two concurrent sessions share the native pool and remote pool
+        # fairly; each returns a future immediately
+        futs = [engine.submit(query) for _ in range(2)]
+        results = [f.result(timeout=600) for f in futs]
+        res = results[0]
+        failed = sum(r["stats"]["failed"] for r in results)
+        print(f"processed {sum(len(r['entities']) for r in results)} clips "
+              f"across {len(futs)} concurrent sessions in "
+              f"{time.time()-t0:.1f}s (failed={failed})")
         clip = next(iter(res["entities"].values()))
         print("output clip shape:", np.asarray(clip).shape,
               "(frames carry the LM-predicted label stamp)")

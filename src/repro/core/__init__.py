@@ -1,13 +1,17 @@
 """The paper's contribution: VDMS-Async — an event-driven, asynchronous
 visual-query execution engine with user-defined and remote operations.
 
-Faithful structure (paper section 5): Thread_1 (repro.core.engine) filters
-entities and enqueues pointers on Queue_1; the event loop
-(repro.core.event_loop) runs Thread_2 (native ops) and Thread_3
+Faithful structure (paper section 5): Thread_1 (repro.core.engine) plans
+queries and enqueues entity pointers on Queue_1; the event loop
+(repro.core.event_loop) runs a native-worker pool (the paper's Thread_2,
+generalized to N workers with per-query fair scheduling) and Thread_3
 (remote/UDF dispatch + response callbacks) over Queue_1/Queue_2 with the
-Entity Response Dictionary updated after every operation.  Baseline
-executors (sync VDMS, PostgreSQL-style pool, Scanner-style frame graph)
-live in repro.core.executors.
+Entity Response Dictionary updated after every operation.  The client API
+is futures-based (repro.core.session): ``submit()`` returns a
+QueryFuture; ``execute()`` is the blocking wrapper.  Baseline executors
+(sync VDMS, PostgreSQL-style pool, Scanner-style frame graph) live in
+repro.core.executors.
 """
 from repro.core.entity import Entity, ERD  # noqa: F401
 from repro.core.pipeline import Operation, make_op, parse_operations  # noqa: F401
+from repro.core.session import QueryFuture, QuerySession  # noqa: F401

@@ -1,46 +1,41 @@
 """VDMS-Async engine: the main thread (Thread_1, paper section 5.1.1).
 
-Receives queries, filters entities against the metadata store, attaches
-the operation pipeline to each entity object, enqueues *pointers* onto
-the event loop's Queue_1, waits for the loop to drain, then assembles
-the response from the ERD.
+The client API is *futures-based*: ``submit(query)`` parses the query,
+compiles it to a per-query plan (repro.query.planner), launches the first
+phase onto the event loop, and returns a :class:`QueryFuture` without
+waiting for any operation to execute — submit cost is O(fan-out) pointer
+work only (metadata filter + blob-pointer lookups; ~1 ms per 100
+entities), never op or network time.  ``execute(query, timeout)``
+is kept as a thin blocking wrapper so every existing caller works
+unchanged and produces byte-identical responses.
 
-Supports many concurrent client queries (experiment C3): each query gets
-a completion latch; the shared event loop interleaves entities from all
-active queries.
+Supports thousands of concurrent in-flight queries (experiment C3 and
+beyond): each query is a session with its own fair-queue lane on Queue_1;
+the shared event loop — with a configurable native-worker pool —
+interleaves entities from all active sessions.  Cancellation/timeout
+drops a session's queued and in-flight work instead of orphaning it.
 """
 from __future__ import annotations
 
 import itertools
+import os
 import threading
-import time
-from typing import Any
+from typing import Callable, Optional
 
 import numpy as np
 
 from repro.core.entity import ERD, Entity
 from repro.core.event_loop import EventLoop
-from repro.core.pipeline import Operation
 from repro.core.remote import RemoteServerPool, TransportModel
-from repro.query.language import Command, parse_query
+from repro.core.session import QueryFuture, QuerySession
+from repro.query.language import parse_query
 from repro.query.metadata import MetadataStore
+from repro.query.planner import CommandPlan, QueryPlanner
 from repro.storage.store import BlobStore
 
 
-class _Latch:
-    def __init__(self, n: int):
-        self._n = n
-        self._cv = threading.Condition()
-
-    def count_down(self):
-        with self._cv:
-            self._n -= 1
-            if self._n <= 0:
-                self._cv.notify_all()
-
-    def wait(self, timeout=None) -> bool:
-        with self._cv:
-            return self._cv.wait_for(lambda: self._n <= 0, timeout)
+def _default_native_workers() -> int:
+    return max(1, min(os.cpu_count() or 1, 8))
 
 
 class VDMSAsyncEngine:
@@ -48,88 +43,109 @@ class VDMSAsyncEngine:
                  transport: TransportModel | None = None,
                  fuse_native: bool = False,
                  batch_remote: int = 1,
-                 dispatch_policy: str = "round_robin"):
+                 dispatch_policy: str = "round_robin",
+                 num_native_workers: int | None = None,
+                 fair_scheduling: bool = True):
         self.meta = MetadataStore()
         self.store = BlobStore()
         self.erd = ERD()
         self.pool = RemoteServerPool(num_remote_servers, transport,
                                      policy=dispatch_policy)
-        self._latches: dict[str, _Latch] = {}
-        self._latch_lock = threading.Lock()
+        self.planner = QueryPlanner(self.meta, self.store)
+        self._sessions: dict[str, QuerySession] = {}
+        self._session_lock = threading.Lock()
+        # None -> cpu-bounded pool; 1 -> the paper-faithful single Thread_2
+        self.num_native_workers = (num_native_workers
+                                   if num_native_workers is not None
+                                   else _default_native_workers())
         self.loop = EventLoop(self.pool, self.erd,
                               fuse_native=fuse_native,
                               batch_remote=batch_remote,
-                              on_entity_done=self._entity_done)
+                              num_native_workers=self.num_native_workers,
+                              fair_scheduling=fair_scheduling,
+                              on_entity_done=self._entity_done,
+                              is_cancelled=self._is_cancelled)
         self._qid = itertools.count()
 
     # ------------------------------------------------------------ ingest
     def add_entity(self, kind: str, data, properties: dict) -> str:
-        eid = self.meta.add(kind, properties)
-        self.store.put(eid, np.asarray(data))
-        return eid
+        return self.planner.ingest(kind, data, properties)
 
     # ------------------------------------------------------------- query
+    def submit(self, query: list[dict] | dict, *,
+               on_entity: Optional[Callable[[Entity], None]] = None
+               ) -> QueryFuture:
+        """Submit a VDMS JSON query; returns immediately with a
+        :class:`QueryFuture`.  ``on_entity(entity)`` streams each entity
+        as it completes its pipeline (called from event-loop threads)."""
+        cmds = parse_query(query)
+        plan = self.planner.compile(cmds)
+        qid = str(next(self._qid))
+        session = QuerySession(qid, plan, self, on_entity=on_entity)
+        fut = QueryFuture(session)     # built before launch: the return
+        with self._session_lock:       # after start() is a single bytecode
+            self._sessions[qid] = session
+        session.start()
+        return fut
+
     def execute(self, query: list[dict] | dict, timeout: float | None = None) -> dict:
         """Run a VDMS JSON query; returns {"entities": {eid: array},
         "stats": {...}}.  Blocks until the pipeline drains (the client-
-        facing call is synchronous, like VDMS; internally everything is
-        event-driven)."""
-        cmds = parse_query(query)
-        t0 = time.monotonic()
-        results: dict[str, Any] = {}
-        stats = {"matched": 0, "failed": 0}
-        for cmd in cmds:
-            if cmd.verb == "add":
-                eid = self.add_entity(cmd.kind, cmd.data, cmd.properties)
-                ents = [self._make_entity(eid, cmd, str(next(self._qid)))]
-                if cmd.operations:
-                    self._run_entities(ents, timeout)
-                    self.store.put(eid, np.asarray(ents[0].data))
-                results[eid] = ents[0].data
-            else:
-                qid = str(next(self._qid))
-                eids = self.meta.find(cmd.kind, cmd.constraints)
-                if cmd.limit:
-                    eids = eids[: cmd.limit]
-                stats["matched"] += len(eids)
-                ents = [self._make_entity(eid, cmd, qid) for eid in eids]
-                self._run_entities(ents, timeout)
-                for e in ents:
-                    if e.failed:
-                        stats["failed"] += 1
-                    results[e.eid] = e.data
-        stats["duration_s"] = time.monotonic() - t0
-        return {"entities": results, "stats": stats}
+        facing call is synchronous, like VDMS; internally it is
+        ``submit().result()``).  ``timeout`` now bounds the *whole query*
+        (the old loop applied it per command) and on expiry the query is
+        *cancelled* — its queued and in-flight entities are dropped,
+        nothing leaks — where the old loop raised and orphaned them."""
+        fut = self.submit(query)
+        try:
+            return fut.result(timeout)
+        except TimeoutError:
+            fut.cancel()
+            raise
 
-    # --------------------------------------------------------- internals
-    def _make_entity(self, eid: str, cmd: Command, qid: str) -> Entity:
-        return Entity(eid=eid, kind=cmd.kind, data=self.store.get(eid),
-                      metadata=self.meta.get(eid), ops=list(cmd.operations),
-                      query_id=qid)
+    # --------------------------------------------------- session plumbing
+    def _expand(self, cplan: CommandPlan, qid: str) -> list[Entity]:
+        return self.planner.expand(cplan, qid)
 
-    def _run_entities(self, ents: list[Entity], timeout=None):
-        if not ents:
-            return
-        qid = ents[0].query_id
-        latch = _Latch(len(ents))
-        with self._latch_lock:
-            self._latches[qid] = latch
-        # Thread_1 enqueues pointers one by one; Thread_2 starts work on the
-        # head entity while the rest are still being enqueued.
+    def _launch(self, ents: list[Entity]):
+        # Pointers land on Queue_1 as one batch: workers wake only after
+        # the whole phase is queued, so submit() stays milliseconds-fast
+        # instead of GIL-starving behind already-running native work.
         for e in ents:
             self.erd.update(e, "enqueued")
-            self.loop.enqueue(e)
-        ok = latch.wait(timeout)
-        with self._latch_lock:
-            self._latches.pop(qid, None)
-        if not ok:
-            raise TimeoutError(f"query {qid} timed out")
+        self.loop.enqueue_many(ents)
+
+    def _store_result(self, ent: Entity):
+        self.store.put(ent.eid, np.asarray(ent.data))
 
     def _entity_done(self, ent: Entity):
-        with self._latch_lock:
-            latch = self._latches.get(ent.query_id)
-        if latch:
-            latch.count_down()
+        with self._session_lock:
+            session = self._sessions.get(ent.query_id)
+        if session is not None:
+            session.entity_done(ent)
+
+    def _is_cancelled(self, qid: str) -> bool:
+        # hot path (checked at every op boundary by every worker): a bare
+        # dict.get is GIL-atomic, so skip _session_lock here — it would
+        # serialize the whole native pool on one lock
+        session = self._sessions.get(qid)
+        return session is None or session.is_cancelled
+
+    def _session_finished(self, qid: str):
+        with self._session_lock:
+            self._sessions.pop(qid, None)
+
+    def _discard_session(self, qid: str):
+        """Cancellation/timeout cleanup: forget the session, drop its
+        queued native work and its in-flight remote requests."""
+        with self._session_lock:
+            self._sessions.pop(qid, None)
+        self.loop.discard_query(qid)
+        self.pool.drop_query(qid)
+
+    def active_sessions(self) -> int:
+        with self._session_lock:
+            return len(self._sessions)
 
     # -------------------------------------------------------- operations
     def scale_remote(self, n: int):
@@ -139,12 +155,18 @@ class VDMSAsyncEngine:
         return {
             "thread2_busy_s": self.loop.t2_meter.busy_seconds(),
             "thread3_busy_s": self.loop.t3_meter.busy_seconds(),
+            "native_workers": self.num_native_workers,
             "remote_processed": sum(s.processed for s in self.pool.servers),
             "retried": self.pool.retried,
             "reissued": self.pool.reissued,
             "duplicates_dropped": self.pool.duplicates_dropped,
+            "cancelled_dropped": self.pool.cancelled_dropped,
         }
 
     def shutdown(self):
+        with self._session_lock:
+            live = list(self._sessions.values())
+        for s in live:            # wake any blocked result() callers
+            s.cancel()
         self.loop.shutdown()
         self.pool.shutdown()

@@ -22,7 +22,8 @@ class Entity:
     metadata: dict = dataclasses.field(default_factory=dict)
     ops: list = dataclasses.field(default_factory=list)   # [Operation]
     op_index: int = 0             # next op to execute
-    query_id: str = ""
+    query_id: str = ""            # owning query session (fair-queue lane)
+    cmd_index: int = 0            # which command of the query fanned it out
     failed: Optional[str] = None
 
     def current_op(self):

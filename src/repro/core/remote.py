@@ -80,9 +80,17 @@ class RemoteServer:
     def load(self) -> int:
         return self.inbox.qsize() + (1 if self.busy else 0)
 
-    def kill(self):
+    def kill(self, join_timeout: float | None = 5.0):
         self.alive = False
         self.inbox.put(None)  # wake
+        # Join so the worker is not abandoned mid-request (daemon threads
+        # racing interpreter teardown). The thread exits promptly: it
+        # finishes at most one in-service request, then drains its inbox.
+        if join_timeout and self._thread is not threading.current_thread():
+            self._thread.join(join_timeout)
+
+    def join(self, timeout: float | None = None):
+        self._thread.join(timeout)
 
     def _run(self):
         while True:
@@ -151,6 +159,8 @@ class RemoteServerPool:
         self.duplicates_dropped = 0
         self.reissued = 0
         self.retried = 0
+        self.cancelled_dropped = 0
+        self._cancelled_rids: set[int] = set()  # await their late replies
         self._lat_est = self.transport.cost(1 << 20)  # moving latency estimate
         self._lat_samples = 0
 
@@ -179,6 +189,11 @@ class RemoteServerPool:
             live = req.rid in self.inflight
             if live:
                 del self.inflight[req.rid]
+            elif req.rid in self._cancelled_rids:
+                # late reply for a cancelled query's request: not a
+                # straggler duplicate — keep the two stats separate
+                self._cancelled_rids.discard(req.rid)
+                return ("dropped", None)
         if not live:
             self.duplicates_dropped += 1
             return ("dropped", None)
@@ -197,6 +212,31 @@ class RemoteServerPool:
         self._pick().submit(req)
         self.retried += 1
         return ("requeued", None)
+
+    # ------------------------------------------------------- cancellation
+    def drop_query(self, query_id: str) -> int:
+        """Forget in-flight requests belonging to a cancelled/timed-out
+        query.  The server replies still arrive, but ``handle_response``
+        no longer finds their rid and drops them — exactly the duplicate-
+        suppression path — so nothing is orphaned in ``inflight``.
+        Batched requests mixing several queries are kept; the event loop
+        filters their per-entity results instead."""
+
+        def _belongs(ent) -> bool:
+            if isinstance(ent, list):
+                return all(e.query_id == query_id for e in ent)
+            return ent.query_id == query_id
+
+        with self._lock:
+            doomed = [rid for rid, r in self.inflight.items()
+                      if _belongs(r.entity)]
+            for rid in doomed:
+                del self.inflight[rid]
+                self._cancelled_rids.add(rid)
+            self.cancelled_dropped += len(doomed)
+            if len(self._cancelled_rids) > 100_000:  # lost-reply backstop
+                self._cancelled_rids.clear()
+        return len(doomed)
 
     # --------------------------------------------------------- stragglers
     def reissue_stragglers(self):
@@ -224,7 +264,9 @@ class RemoteServerPool:
             self.servers.append(RemoteServer(len(self.servers), self.transport))
         live = [s for s in self.servers if s.alive]
         for s in live[n:]:
-            s.kill()
+            # signal only: elastic scale-in must not block the caller
+            # through sequential drains (threads are joined at shutdown)
+            s.kill(join_timeout=None)
 
     def kill_server(self, sid: int):
         self.servers[sid].kill()
@@ -232,6 +274,8 @@ class RemoteServerPool:
     def live_count(self) -> int:
         return sum(s.alive for s in self.servers)
 
-    def shutdown(self):
+    def shutdown(self, timeout: float = 5.0):
         for s in self.servers:
-            s.kill()
+            s.kill(join_timeout=None)   # signal everyone first ...
+        for s in self.servers:
+            s.join(timeout)             # ... then join (parallel drain)

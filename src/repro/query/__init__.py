@@ -1,2 +1,5 @@
+"""Query layer: VDMS-style JSON language, metadata store, and the
+per-query planner that compiles commands into phased execution plans."""
+from repro.query.language import Command, parse_query  # noqa: F401
 from repro.query.metadata import MetadataStore  # noqa: F401
-from repro.query.language import parse_query  # noqa: F401
+from repro.query.planner import CommandPlan, QueryPlan, QueryPlanner  # noqa: F401

@@ -35,6 +35,7 @@ class Command:
     operations: list
     data: Any = None
     limit: int | None = None
+    name: str = ""                 # original command name (plan display)
 
 
 def parse_query(q: list[dict]) -> list[Command]:
@@ -57,5 +58,6 @@ def parse_query(q: list[dict]) -> list[Command]:
             operations=parse_operations(body.get("operations", [])),
             data=body.get("data"),
             limit=body.get("limit"),
+            name=name,
         ))
     return cmds

@@ -1,0 +1,107 @@
+"""Per-query planning: compile parsed ``Command``s into an explicit plan.
+
+The engine used to interpret commands with an inline loop — one command
+at a time, each blocking on its own latch.  The planner makes the query's
+structure first-class instead:
+
+- ``compile`` groups a query's commands into **phases**.  Consecutive
+  ``Find`` commands form one phase and execute *concurrently* (their
+  entities interleave on the native pool and remote pool); an ``Add``
+  command is a barrier phase of its own, because later commands may match
+  the entity it ingests (write-then-read within one query keeps the
+  sequential semantics of the old loop).
+- ``expand`` performs the entity fan-out for one command at phase-launch
+  time: constraint filtering against the metadata store, blob-pointer
+  lookup, op-pipeline attachment.  Fan-out is deferred to launch (not
+  compile) so a phase sees the writes of every barrier before it.
+
+Result assembly stays deterministic regardless of execution order: the
+plan records each command's matched-eid order, and the session assembles
+the response in (command order x eid order) — byte-identical to the old
+blocking loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core.entity import Entity
+from repro.query.language import Command
+from repro.query.metadata import MetadataStore
+from repro.storage.store import BlobStore
+
+
+@dataclasses.dataclass
+class CommandPlan:
+    """One command's slice of the query plan.  Barrier semantics live in
+    the phase structure itself: an Add command is always the sole member
+    of its phase and later phases launch only after it completes."""
+    index: int                 # position in the query (assembly order)
+    command: Command
+    # filled in by expand():
+    eids: list[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    phases: list[list[CommandPlan]]
+
+    @property
+    def num_commands(self) -> int:
+        return sum(len(p) for p in self.phases)
+
+
+class QueryPlanner:
+    """Compiles commands to phases and expands per-command entity fan-out."""
+
+    def __init__(self, meta: MetadataStore, store: BlobStore):
+        self.meta = meta
+        self.store = store
+
+    # ----------------------------------------------------------- compile
+    def compile(self, cmds: list[Command]) -> QueryPlan:
+        phases: list[list[CommandPlan]] = []
+        current: list[CommandPlan] = []
+        for i, cmd in enumerate(cmds):
+            if cmd.verb == "add":
+                if current:
+                    phases.append(current)
+                    current = []
+                phases.append([CommandPlan(index=i, command=cmd)])
+            else:
+                current.append(CommandPlan(index=i, command=cmd))
+        if current:
+            phases.append(current)
+        return QueryPlan(phases=phases)
+
+    # ------------------------------------------------------------ ingest
+    def ingest(self, kind: str, data, properties: dict) -> str:
+        """The single ingestion path: metadata row + blob.  Used both by
+        the engine's ``add_entity`` and by Add-command expansion, so
+        ingestion changes apply to each identically."""
+        eid = self.meta.add(kind, properties)
+        self.store.put(eid, np.asarray(data))
+        return eid
+
+    # ------------------------------------------------------------ expand
+    def expand(self, cplan: CommandPlan, query_id: str) -> list[Entity]:
+        """Fan a command out into entities (ingesting first for Add).
+        Records the matched-eid order on the plan for result assembly."""
+        cmd = cplan.command
+        if cmd.verb == "add":
+            eids = [self.ingest(cmd.kind, cmd.data, cmd.properties)]
+        else:
+            eids = self.meta.find(cmd.kind, cmd.constraints)
+            if cmd.limit:
+                eids = eids[: cmd.limit]
+        cplan.eids = eids
+        return [self._make_entity(eid, cmd, cplan.index, query_id)
+                for eid in eids]
+
+    def _make_entity(self, eid: str, cmd: Command, cmd_index: int,
+                     query_id: str) -> Entity:
+        return Entity(eid=eid, kind=cmd.kind, data=self.store.get(eid),
+                      metadata=self.meta.get(eid), ops=list(cmd.operations),
+                      query_id=query_id, cmd_index=cmd_index)

@@ -42,8 +42,13 @@ class Request:
         default_factory=threading.Event)
 
     def result(self, timeout=None) -> np.ndarray:
-        self.done_event.wait(timeout)
+        if not self.done_event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} timed out")
         return np.asarray(self.out, np.int32)
+
+    def done(self) -> bool:
+        # mirrors the engine's QueryFuture polling API
+        return self.done_event.is_set()
 
 
 class GroupBatcher:

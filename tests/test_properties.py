@@ -1,7 +1,9 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
 
 from repro.core.engine import VDMSAsyncEngine
 from repro.core.remote import TransportModel

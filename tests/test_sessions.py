@@ -1,0 +1,267 @@
+"""Async query sessions: the futures-based submit() API, per-query fair
+scheduling on the native pool, cancellation, and timeout cleanup."""
+import threading
+import time
+from concurrent.futures import CancelledError
+
+import numpy as np
+import pytest
+
+from repro.core.engine import VDMSAsyncEngine
+from repro.core.event_loop import BusyMeter, FairQueue
+from repro.core.entity import Entity
+from repro.core.remote import TransportModel
+
+FAST = TransportModel(network_latency_s=0.001, service_time_s=0.002)
+SLOW = TransportModel(network_latency_s=0.001, service_time_s=0.05)
+
+PIPE = [
+    {"type": "resize", "width": 24, "height": 24},
+    {"type": "remote", "url": "http://s/box", "options": {"id": "facedetect_box"}},
+    {"type": "threshold", "value": 0.4},
+]
+
+NATIVE_PIPE = [
+    {"type": "resize", "width": 24, "height": 24},
+    {"type": "grayscale"},
+    {"type": "threshold", "value": 0.5},
+]
+
+
+def _mk_engine(**kw):
+    kw.setdefault("num_remote_servers", 2)
+    kw.setdefault("transport", FAST)
+    return VDMSAsyncEngine(**kw)
+
+
+def _add_images(eng, n=10, size=32, category="lfw"):
+    rng = np.random.default_rng(0)
+    ids = []
+    for i in range(n):
+        img = rng.uniform(0, 1, (size, size, 3)).astype(np.float32)
+        ids.append(eng.add_entity("image", img, {
+            "category": category, "name": f"p{i}", "age": 20 + i}))
+    return ids
+
+
+def _find(category="lfw", ops=PIPE):
+    return [{"FindImage": {"constraints": {"category": ["==", category]},
+                           "operations": ops}}]
+
+
+# --------------------------------------------------------------- futures
+def test_submit_returns_immediately_and_matches_execute():
+    eng = _mk_engine()
+    try:
+        _add_images(eng, 100)
+        ref = eng.execute(_find(), timeout=120)     # also warms up jit
+        t0 = time.monotonic()
+        fut = eng.submit(_find())
+        submit_s = time.monotonic() - t0
+        assert submit_s < 0.1, f"submit took {submit_s:.3f}s for 100 entities"
+        res = fut.result(timeout=120)
+        assert fut.done() and not fut.cancelled()
+        assert res["stats"]["matched"] == ref["stats"]["matched"] == 100
+        assert res["stats"]["failed"] == 0
+        assert list(res["entities"]) == list(ref["entities"])  # same order
+        for eid in ref["entities"]:
+            np.testing.assert_array_equal(np.asarray(res["entities"][eid]),
+                                          np.asarray(ref["entities"][eid]))
+    finally:
+        eng.shutdown()
+
+
+def test_streaming_callback_fires_per_entity():
+    eng = _mk_engine()
+    try:
+        _add_images(eng, 8)
+        seen = []
+        lock = threading.Lock()
+
+        def on_entity(ent):
+            with lock:
+                seen.append(ent.eid)
+
+        fut = eng.submit(_find(), on_entity=on_entity)
+        res = fut.result(timeout=60)
+        assert sorted(seen) == sorted(res["entities"])
+        assert len(seen) == 8
+    finally:
+        eng.shutdown()
+
+
+def test_concurrent_submits_from_many_threads():
+    eng = _mk_engine(num_remote_servers=4)
+    try:
+        _add_images(eng, 10)
+        futs = {}
+        lock = threading.Lock()
+
+        def client(cid):
+            f = eng.submit(_find())
+            with lock:
+                futs[cid] = f
+
+        threads = [threading.Thread(target=client, args=(i,)) for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(futs) == 8
+        for f in futs.values():
+            r = f.result(timeout=120)
+            assert r["stats"]["matched"] == 10
+            assert r["stats"]["failed"] == 0
+        assert eng.active_sessions() == 0
+    finally:
+        eng.shutdown()
+
+
+def test_done_callback_and_add_command_via_submit():
+    eng = _mk_engine()
+    try:
+        rng = np.random.default_rng(7)
+        img = rng.uniform(0, 1, (30, 30, 3)).astype(np.float32)
+        fired = threading.Event()
+        fut = eng.submit([{"AddImage": {
+            "properties": {"category": "new"}, "data": img,
+            "operations": [{"type": "resize", "width": 10, "height": 10}]}},
+            {"FindImage": {"constraints": {"category": ["==", "new"]},
+                           "operations": []}}])
+        fut.add_done_callback(lambda f: fired.set())
+        res = fut.result(timeout=60)
+        assert fired.wait(5)
+        # the Find phase ran after the Add barrier: it sees the processed blob
+        (arr,) = list(res["entities"].values())
+        assert np.asarray(arr).shape == (10, 10, 3)
+    finally:
+        eng.shutdown()
+
+
+# -------------------------------------------------------------- fairness
+def test_small_query_not_starved_by_huge_query():
+    eng = _mk_engine(num_native_workers=1)   # single worker: worst case
+    try:
+        _add_images(eng, 500, size=16, category="big")
+        _add_images(eng, 1, size=16, category="small")
+        eng.execute(_find("small", NATIVE_PIPE), timeout=60)  # jit warmup
+        big = eng.submit(_find("big", NATIVE_PIPE))
+        small = eng.submit(_find("small", NATIVE_PIPE))
+        res = small.result(timeout=60)
+        assert res["stats"]["matched"] == 1
+        # fair round-robin: the 1-entity query finishes long before the
+        # 500-entity query ahead of it in arrival order has drained
+        assert not big.done(), "fair scheduling failed: small query waited " \
+                               "for the whole 500-entity query"
+        big_res = big.result(timeout=120)
+        assert big_res["stats"]["matched"] == 500
+        assert big_res["stats"]["failed"] == 0
+    finally:
+        eng.shutdown()
+
+
+# ---------------------------------------------------------- cancellation
+def test_cancel_mid_pipeline_drops_inflight_work():
+    eng = _mk_engine(num_remote_servers=1, transport=SLOW)
+    try:
+        _add_images(eng, 12)
+        first = threading.Event()
+        fut = eng.submit(_find(), on_entity=lambda e: first.set())
+        assert first.wait(30), "no entity completed before cancel"
+        assert fut.cancel()
+        assert fut.cancelled() and fut.done()
+        with pytest.raises(CancelledError):
+            fut.result(timeout=5)
+        assert eng.active_sessions() == 0
+        # queued native work dropped; in-flight remote requests forgotten
+        deadline = time.monotonic() + 10
+        while (eng.pool.inflight or eng.loop.queue1.qsize()) \
+                and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert not eng.pool.inflight, "cancelled query left inflight requests"
+        assert eng.loop.queue1.qsize() == 0
+        # the engine is still healthy for new queries
+        res = eng.execute(_find(), timeout=60)
+        assert res["stats"]["matched"] == 12
+        assert res["stats"]["failed"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_cancel_after_done_returns_false():
+    eng = _mk_engine()
+    try:
+        _add_images(eng, 2)
+        fut = eng.submit(_find())
+        fut.result(timeout=60)
+        assert not fut.cancel()
+        assert not fut.cancelled()
+    finally:
+        eng.shutdown()
+
+
+def test_timeout_cancels_and_leaks_nothing():
+    eng = _mk_engine(num_remote_servers=1, transport=SLOW)
+    try:
+        _add_images(eng, 16)
+        with pytest.raises(TimeoutError):
+            eng.execute(_find(), timeout=0.05)
+        assert eng.active_sessions() == 0, "timed-out session leaked"
+        deadline = time.monotonic() + 10
+        while (eng.pool.inflight or eng.loop.queue1.qsize()) \
+                and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert not eng.pool.inflight, "timed-out query left inflight requests"
+        assert eng.loop.queue1.qsize() == 0
+        # engine still serves follow-up queries to completion
+        res = eng.execute(_find("lfw", NATIVE_PIPE), timeout=60)
+        assert res["stats"]["matched"] == 16
+        assert res["stats"]["failed"] == 0
+    finally:
+        eng.shutdown()
+
+
+# ------------------------------------------------------- native pool knob
+def test_worker_pool_matches_single_worker_results():
+    eng1 = _mk_engine(num_native_workers=1)
+    eng4 = _mk_engine(num_native_workers=4)
+    try:
+        _add_images(eng1, 12)
+        _add_images(eng4, 12)
+        r1 = eng1.execute(_find("lfw", NATIVE_PIPE), timeout=60)
+        r4 = eng4.execute(_find("lfw", NATIVE_PIPE), timeout=60)
+        assert list(r1["entities"]) == list(r4["entities"])
+        for eid in r1["entities"]:
+            np.testing.assert_array_equal(np.asarray(r1["entities"][eid]),
+                                          np.asarray(r4["entities"][eid]))
+    finally:
+        eng1.shutdown()
+        eng4.shutdown()
+
+
+# --------------------------------------------------------------- plumbing
+def test_fair_queue_round_robin_and_discard():
+    q = FairQueue(fair=True)
+    for i in range(3):
+        q.put(Entity(f"a{i}", "image", None, query_id="A"))
+    for i in range(2):
+        q.put(Entity(f"b{i}", "image", None, query_id="B"))
+    order = [q.get(timeout=1).query_id for _ in range(3)]
+    assert order == ["A", "B", "A"]          # lanes alternate
+    assert q.discard("A") == 1
+    assert q.get(timeout=1).query_id == "B"
+    assert q.qsize() == 0
+    q.close()
+    assert q.get() is None
+
+
+def test_busy_meter_window_is_bounded():
+    m = BusyMeter(window=8)
+    for _ in range(100):
+        m.start()
+        m.stop()
+    assert len(m.intervals) == 8             # rolling window only
+    assert m.total_intervals == 100          # aggregate keeps counting
+    assert m.busy_seconds() >= m.busy_seconds(since=time.monotonic())
+    total = m.busy_seconds()
+    assert total >= sum(b - a for a, b in m.intervals)
