@@ -21,7 +21,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="image|video|cputrace|scaleout|roofline|fusion|"
-                         "serving|native_pool")
+                         "serving|native_pool|hotpath")
     args = ap.parse_args()
 
     from benchmarks import cpu_trace, image_suite, scaleout, video_suite
@@ -53,6 +53,9 @@ def main() -> None:
     suites["native_pool"] = lambda: serving_bench.run_native_pool(
         n_images=48 if args.full else 24,
         sessions=4 if args.full else 2)
+    from benchmarks import hotpath
+    # also writes repo-root BENCH_hotpath.json (perf trajectory across PRs)
+    suites["hotpath"] = lambda: hotpath.run(smoke=not args.full)
     suites["fusion"] = lambda: (
         image_suite.run_c2(16, fuse=False)
         + [dict(r, name=r["name"] + "_fused")

@@ -27,6 +27,7 @@ import numpy as np
 from repro.core.entity import ERD, Entity
 from repro.core.event_loop import EventLoop
 from repro.core.remote import RemoteServerPool, TransportModel
+from repro.core.result_cache import ResultCache
 from repro.core.session import QueryFuture, QuerySession
 from repro.query.language import parse_query
 from repro.query.metadata import MetadataStore
@@ -45,13 +46,26 @@ class VDMSAsyncEngine:
                  batch_remote: int = 1,
                  dispatch_policy: str = "round_robin",
                  num_native_workers: int | None = None,
-                 fair_scheduling: bool = True):
+                 fair_scheduling: bool = True,
+                 cache_capacity: int = 0,
+                 cache_capacity_bytes: int = 256 << 20,
+                 coalesce_window_ms: float = 0.0,
+                 coalesce_max_batch: int = 64):
         self.meta = MetadataStore()
         self.store = BlobStore()
         self.erd = ERD()
         self.pool = RemoteServerPool(num_remote_servers, transport,
                                      policy=dispatch_policy)
-        self.planner = QueryPlanner(self.meta, self.store)
+        # hot-path perf subsystems, both paper-faithful OFF by default:
+        # cache_capacity > 0 enables the (eid, pipeline-signature) result
+        # cache; coalesce_window_ms > 0 enables cross-session remote
+        # request coalescing (one batched request per op signature per
+        # window, amortized via TransportModel.cost_batch)
+        self.result_cache = (ResultCache(cache_capacity,
+                                         cache_capacity_bytes)
+                             if cache_capacity > 0 else None)
+        self.planner = QueryPlanner(self.meta, self.store,
+                                    result_cache=self.result_cache)
         self._sessions: dict[str, QuerySession] = {}
         self._session_lock = threading.Lock()
         # None -> cpu-bounded pool; 1 -> the paper-faithful single Thread_2
@@ -64,7 +78,10 @@ class VDMSAsyncEngine:
                               num_native_workers=self.num_native_workers,
                               fair_scheduling=fair_scheduling,
                               on_entity_done=self._entity_done,
-                              is_cancelled=self._is_cancelled)
+                              is_cancelled=self._is_cancelled,
+                              coalesce_window_s=coalesce_window_ms / 1000.0,
+                              coalesce_max_batch=coalesce_max_batch,
+                              result_cache=self.result_cache)
         self._qid = itertools.count()
 
     # ------------------------------------------------------------ ingest
@@ -73,22 +90,27 @@ class VDMSAsyncEngine:
 
     # ------------------------------------------------------------- query
     def submit(self, query: list[dict] | dict, *,
-               on_entity: Optional[Callable[[Entity], None]] = None
-               ) -> QueryFuture:
+               on_entity: Optional[Callable[[Entity], None]] = None,
+               cache: bool = True) -> QueryFuture:
         """Submit a VDMS JSON query; returns immediately with a
         :class:`QueryFuture`.  ``on_entity(entity)`` streams each entity
-        as it completes its pipeline (called from event-loop threads)."""
+        as it completes its pipeline (called from event-loop threads).
+        ``cache=False`` makes this query bypass the result cache (no
+        reads, no writes); it is a no-op when the engine was built
+        without a cache (``cache_capacity=0``, the default)."""
         cmds = parse_query(query)
         plan = self.planner.compile(cmds)
         qid = str(next(self._qid))
-        session = QuerySession(qid, plan, self, on_entity=on_entity)
+        session = QuerySession(qid, plan, self, on_entity=on_entity,
+                               use_cache=cache)
         fut = QueryFuture(session)     # built before launch: the return
         with self._session_lock:       # after start() is a single bytecode
             self._sessions[qid] = session
         session.start()
         return fut
 
-    def execute(self, query: list[dict] | dict, timeout: float | None = None) -> dict:
+    def execute(self, query: list[dict] | dict, timeout: float | None = None,
+                *, cache: bool = True) -> dict:
         """Run a VDMS JSON query; returns {"entities": {eid: array},
         "stats": {...}}.  Blocks until the pipeline drains (the client-
         facing call is synchronous, like VDMS; internally it is
@@ -96,7 +118,7 @@ class VDMSAsyncEngine:
         (the old loop applied it per command) and on expiry the query is
         *cancelled* — its queued and in-flight entities are dropped,
         nothing leaks — where the old loop raised and orphaned them."""
-        fut = self.submit(query)
+        fut = self.submit(query, cache=cache)
         try:
             return fut.result(timeout)
         except TimeoutError:
@@ -104,8 +126,9 @@ class VDMSAsyncEngine:
             raise
 
     # --------------------------------------------------- session plumbing
-    def _expand(self, cplan: CommandPlan, qid: str) -> list[Entity]:
-        return self.planner.expand(cplan, qid)
+    def _expand(self, cplan: CommandPlan, qid: str,
+                use_cache: bool = True) -> list[Entity]:
+        return self.planner.expand(cplan, qid, use_cache)
 
     def _launch(self, ents: list[Entity]):
         # Pointers land on Queue_1 as one batch: workers wake only after
@@ -117,6 +140,10 @@ class VDMSAsyncEngine:
 
     def _store_result(self, ent: Entity):
         self.store.put(ent.eid, np.asarray(ent.data))
+        if self.result_cache is not None:
+            # blob write-back (Add with operations): cached results for
+            # this eid were computed from the blob just overwritten
+            self.result_cache.invalidate(ent.eid)
 
     def _entity_done(self, ent: Entity):
         with self._session_lock:
@@ -157,11 +184,21 @@ class VDMSAsyncEngine:
             "thread3_busy_s": self.loop.t3_meter.busy_seconds(),
             "native_workers": self.num_native_workers,
             "remote_processed": sum(s.processed for s in self.pool.servers),
+            "remote_dispatched": self.pool.dispatched,
+            "remote_transport_busy_s": sum(s.transport_busy_s
+                                           for s in self.pool.servers),
+            "coalesced_batches": self.loop.coalesced_batches,
+            "coalesced_entities": self.loop.coalesced_entities,
             "retried": self.pool.retried,
             "reissued": self.pool.reissued,
             "duplicates_dropped": self.pool.duplicates_dropped,
             "cancelled_dropped": self.pool.cancelled_dropped,
         }
+
+    def cache_stats(self) -> dict:
+        """Result-cache counters (empty dict when the cache is off)."""
+        return (self.result_cache.stats()
+                if self.result_cache is not None else {})
 
     def shutdown(self):
         with self._session_lock:

@@ -25,6 +25,14 @@ class Entity:
     query_id: str = ""            # owning query session (fair-queue lane)
     cmd_index: int = 0            # which command of the query fanned it out
     failed: Optional[str] = None
+    # result-cache plumbing (set by the planner only when the engine cache
+    # is enabled and the query opted in; all None/False otherwise):
+    cacheable: bool = False       # event loop may record this entity
+    cache_hit: Optional[str] = None          # "full" | "prefix" | None
+    cache_sigs: Optional[list] = None        # prefix signatures, shared
+                                             # across the command's fan-out
+    cache_epoch: int = 0          # eid write epoch at blob-read time; a
+                                  # put against a newer epoch is refused
 
     def current_op(self):
         return self.ops[self.op_index] if self.op_index < len(self.ops) else None

@@ -29,7 +29,24 @@ timed-out query drains instead of orphaning work.
 Beyond-paper knobs, default OFF:
 - ``fuse_native``:   jit-fuse maximal native-op runs (one dispatch per run);
 - ``batch_remote``:  coalesce up to N same-op entities per remote request,
-                     amortizing per-request network latency.
+                     amortizing per-request network latency (per-buffer:
+                     whatever happens to sit in Thread_3's buffer at flush
+                     time);
+- ``coalesce_window_s``: cross-session request coalescing.  Instead of
+  flushing Thread_3's buffer wholesale, pending remote work is grouped by
+  op signature (which pins the endpoint, so a group maps to one batched
+  request on one server); each group is held open for the window from its
+  first member's arrival — or until ``coalesce_max_batch`` — then
+  dispatched as ONE batched request whose transport cost is the amortized
+  ``TransportModel.cost_batch``.  Entities from *different* query sessions
+  share a batch; replies fan back out per entity, and a cancelled query's
+  members are dropped from shared batches (at flush time for buffered
+  work, per-entity at reply time for in-flight work) without disturbing
+  the other sessions in the batch.
+- a :class:`~repro.core.result_cache.ResultCache` (``result_cache``):
+  workers record each cacheable entity's final result, plus an
+  intermediate snapshot after every remote/UDF op — the expensive resume
+  points for prefix hits.
 
 Note the scheduling knobs are NOT paper-faithful by default: the engine
 defaults to a cpu-bounded worker pool and fair per-query lanes.  The
@@ -209,11 +226,19 @@ class EventLoop:
                  fair_scheduling: bool = True,
                  on_entity_done: Optional[Callable[[Entity], None]] = None,
                  is_cancelled: Optional[Callable[[str], bool]] = None,
-                 straggler_check_s: float = 0.1):
+                 straggler_check_s: float = 0.1,
+                 coalesce_window_s: float = 0.0,
+                 coalesce_max_batch: int = 64,
+                 result_cache=None):
         self.pool = pool
         self.erd = erd
         self.fuse_native = fuse_native
         self.batch_remote = max(1, batch_remote)
+        self.coalesce_window_s = max(0.0, coalesce_window_s)
+        self.coalesce_max_batch = max(2, coalesce_max_batch)
+        self.result_cache = result_cache
+        self.coalesced_batches = 0
+        self.coalesced_entities = 0
         self.num_native_workers = max(1, num_native_workers)
         self.on_entity_done = on_entity_done or (lambda e: None)
         self.is_cancelled = is_cancelled or (lambda qid: False)
@@ -289,45 +314,104 @@ class EventLoop:
                     ent.data.block_until_ready()
                 ent.op_index += 1
                 self.erd.update(ent, f"native:{op.name}")
+        self._record_cache(ent)
         self.on_entity_done(ent)
+
+    def _record_cache(self, ent: Entity):
+        """Record a cacheable entity's pipeline state under the signature
+        of the ops completed so far.  Called at pipeline completion and
+        after every remote/UDF reply (the expensive resume points —
+        intermediate native states are cheap to recompute and are not
+        snapshotted)."""
+        rc = self.result_cache
+        if rc is None or not ent.cacheable or ent.failed or not ent.op_index:
+            return
+        sigs = ent.cache_sigs
+        if sigs:
+            rc.put(ent.eid, sigs[ent.op_index - 1], ent.data,
+                   epoch=ent.cache_epoch)
 
     # ------------------------------------------------------- Thread_3 loop
     def _thread3(self):
-        pending: list[Entity] = []  # dispatch batching buffer
+        pending: list[Entity] = []  # dispatch batching buffer (window off)
+        # coalescing-window state: one open group per op signature, with
+        # the deadline set by its FIRST member's arrival
+        groups: dict[Any, list[Entity]] = {}
+        deadlines: dict[Any, float] = {}
+        coalesce = self.coalesce_window_s > 0.0
         last_straggler = time.monotonic()
         while True:
+            timeout = self.straggler_check_s
+            if deadlines:
+                timeout = min(timeout, max(0.0, min(deadlines.values())
+                                           - time.monotonic()))
             try:
-                msg = self.queue2.get(timeout=self.straggler_check_s)
+                msg = self.queue2.get(timeout=timeout)
             except queue.Empty:
                 msg = None
             now = time.monotonic()
             if now - last_straggler > self.straggler_check_s:
                 self.pool.reissue_stragglers()
                 last_straggler = now
-            if msg is None:
-                if pending:
-                    self.t3_meter.start()
-                    self._flush(pending)
-                    pending = []
-                    self.t3_meter.stop()
-                continue
             if msg is _STOP:
                 return
-            self.t3_meter.start()
-            kind = msg[0]
-            if kind == "dispatch":
-                pending.append(msg[1])
-                if len(pending) >= self.batch_remote:
-                    self._flush(pending)
-                    pending = []
-            else:
-                # R-UDF-Response callback
-                tag, req, payload = msg
-                self._handle_response(tag, req, payload)
-                if pending:
-                    self._flush(pending)
-                    pending = []
-            self.t3_meter.stop()
+            if msg is not None:
+                self.t3_meter.start()
+                kind = msg[0]
+                if kind == "dispatch":
+                    ent = msg[1]
+                    if coalesce:
+                        op = ent.current_op()
+                        group = groups.get(op)
+                        if group is None:
+                            group = groups[op] = []
+                            deadlines[op] = now + self.coalesce_window_s
+                        group.append(ent)
+                        if len(group) >= self.coalesce_max_batch:
+                            del groups[op], deadlines[op]
+                            self._dispatch_group(group)
+                    else:
+                        pending.append(ent)
+                        if len(pending) >= self.batch_remote:
+                            self._flush(pending)
+                            pending = []
+                else:
+                    # R-UDF-Response callback
+                    tag, req, payload = msg
+                    self._handle_response(tag, req, payload)
+                    if pending:
+                        self._flush(pending)
+                        pending = []
+                self.t3_meter.stop()
+            elif pending:
+                self.t3_meter.start()
+                self._flush(pending)
+                pending = []
+                self.t3_meter.stop()
+            if deadlines:
+                now = time.monotonic()
+                expired = [op for op, dl in deadlines.items() if dl <= now]
+                if expired:
+                    self.t3_meter.start()
+                    for op in expired:
+                        group = groups.pop(op)
+                        del deadlines[op]
+                        self._dispatch_group(group)
+                    self.t3_meter.stop()
+
+    def _dispatch_group(self, group: list[Entity]):
+        """Dispatch one coalesced group as a single batched request.
+        Members of queries cancelled while buffered are dropped here —
+        only *their* slots leave the shared batch."""
+        group = [e for e in group if not self.is_cancelled(e.query_id)]
+        if not group:
+            return
+        if len(group) == 1:
+            self.pool.dispatch(group[0], group[0].current_op(), self.queue2)
+            return
+        self.coalesced_batches += 1
+        self.coalesced_entities += len(group)
+        self.pool.dispatch(group, group[0].current_op(), self.queue2)
 
     def _flush(self, entities: list[Entity]):
         """Q2-Enqueue handling: dispatch entities' current ops (grouped
@@ -362,6 +446,7 @@ class EventLoop:
             ent.data = res
             ent.op_index += 1
             self.erd.update(ent, f"remote:{req.op.name}")
+            self._record_cache(ent)
             if ent.done():
                 self.on_entity_done(ent)
             else:

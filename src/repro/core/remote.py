@@ -62,6 +62,10 @@ class Request:
     reissues: int = 0
 
 
+def _batch_size(req: Request) -> int:
+    return len(req.entity) if isinstance(req.entity, list) else 1
+
+
 class RemoteServer:
     def __init__(self, sid: int, transport: TransportModel):
         self.sid = sid
@@ -70,15 +74,28 @@ class RemoteServer:
         self.alive = True
         self.busy = False
         self.processed = 0
+        self.transport_busy_s = 0.0   # accumulated cost_batch time
+        self._pending = 0             # queued + in-service ENTITIES
+        self._pending_lock = threading.Lock()
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name=f"remote-server-{sid}")
         self._thread.start()
 
     def submit(self, req: Request):
+        with self._pending_lock:
+            self._pending += _batch_size(req)
         self.inbox.put(req)
 
+    def _finished(self, req: Request):
+        with self._pending_lock:
+            self._pending -= _batch_size(req)
+
     def load(self) -> int:
-        return self.inbox.qsize() + (1 if self.busy else 0)
+        # entities, not requests: a k-entity coalesced batch is k units of
+        # pending work, so least_loaded dispatch stays balanced when
+        # batched and per-entity requests mix
+        with self._pending_lock:
+            return self._pending
 
     def kill(self, join_timeout: float | None = 5.0):
         self.alive = False
@@ -104,37 +121,41 @@ class RemoteServer:
                         except queue.Empty:
                             break
                         if r is not None:
+                            self._finished(r)
                             r.reply_to.put(("server_died", r, None))
                     return
                 continue
             if not self.alive:
+                self._finished(req)
                 req.reply_to.put(("server_died", req, None))
                 continue
             self.busy = True
             try:
-                if isinstance(req.entity, list):  # batched dispatch
-                    datas = [e.data for e in req.entity]
-                    time.sleep(self.transport.cost_batch(
-                        [getattr(d, "nbytes", 0) for d in datas]))
-                    result = [run_op(req.op, d) if self.transport.execute_ops
-                              else d for d in datas]
-                    for r in result:
-                        if hasattr(r, "block_until_ready"):
-                            r.block_until_ready()
-                    self.processed += len(result)
-                else:
-                    data = req.entity.data
-                    payload = getattr(data, "nbytes", 0)
-                    # network + remote-capacity cost (GIL-releasing)
-                    time.sleep(self.transport.cost(payload))
-                    result = run_op(req.op, data) if self.transport.execute_ops else data
-                    if result is not None and hasattr(result, "block_until_ready"):
-                        result.block_until_ready()
-                    self.processed += 1
-                req.reply_to.put(("ok", req, result))
+                # single path for per-entity and batched requests: the
+                # transport cost of a request is ALWAYS cost_batch over
+                # its payloads (cost_batch([p]) == cost(p)), never a
+                # per-payload cost() sum — one request pays the network
+                # latency once, which is the amortization batching buys
+                batched = isinstance(req.entity, list)
+                ents = req.entity if batched else [req.entity]
+                datas = [e.data for e in ents]
+                dt = self.transport.cost_batch(
+                    [getattr(d, "nbytes", 0) for d in datas])
+                self.transport_busy_s += dt
+                # network + remote-capacity cost (GIL-releasing)
+                time.sleep(dt)
+                results = [run_op(req.op, d) if self.transport.execute_ops
+                           else d for d in datas]
+                for r in results:
+                    if r is not None and hasattr(r, "block_until_ready"):
+                        r.block_until_ready()
+                self.processed += len(results)
+                req.reply_to.put(("ok", req,
+                                  results if batched else results[0]))
             except Exception as e:  # noqa: BLE001 — report, don't kill worker
                 req.reply_to.put(("error", req, e))
             finally:
+                self._finished(req)
                 self.busy = False
 
 
@@ -156,6 +177,7 @@ class RemoteServerPool:
         self._rid = itertools.count()
         self._lock = threading.Lock()
         self.inflight: dict[int, Request] = {}
+        self.dispatched = 0        # requests issued (a batch counts once)
         self.duplicates_dropped = 0
         self.reissued = 0
         self.retried = 0
@@ -178,6 +200,7 @@ class RemoteServerPool:
                       reply_to=reply_to, issued_at=time.monotonic())
         with self._lock:
             self.inflight[req.rid] = req
+            self.dispatched += 1
         self._pick().submit(req)
         return req.rid
 
@@ -198,7 +221,10 @@ class RemoteServerPool:
             self.duplicates_dropped += 1
             return ("dropped", None)
         if tag == "ok":
-            dt = time.monotonic() - req.issued_at
+            # amortized PER-ENTITY latency: a k-entity batch legitimately
+            # takes ~cost_batch longer, and must neither inflate the
+            # estimate for per-entity requests nor look like a straggler
+            dt = (time.monotonic() - req.issued_at) / _batch_size(req)
             self._lat_est = 0.9 * self._lat_est + 0.1 * dt
             self._lat_samples += 1
             return ("done", payload)
@@ -247,11 +273,17 @@ class RemoteServerPool:
         if self._lat_samples < 8:
             return
         now = time.monotonic()
+        # expected wall of a k-entity request = fixed per-request latency
+        # + k x amortized per-entity cost; scaling ONLY the per-entity
+        # term keeps single requests from looking like stragglers when
+        # batched traffic has driven the amortized estimate far below the
+        # fixed network latency
+        fixed = self.transport.network_latency_s
         with self._lock:
             slow = [r for r in self.inflight.values()
                     if r.reissues == 0
                     and now - r.issued_at > self.straggler_factor
-                    * max(self._lat_est, 1e-4)]
+                    * (fixed + max(self._lat_est, 1e-4) * _batch_size(r))]
         for r in slow:
             self.reissued += 1
             r.reissues += 1

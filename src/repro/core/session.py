@@ -38,11 +38,13 @@ class QuerySession:
     """Per-query state machine driven by event-loop callbacks."""
 
     def __init__(self, qid: str, plan: "QueryPlan", engine: Any,
-                 on_entity: Optional[Callable[[Entity], None]] = None):
+                 on_entity: Optional[Callable[[Entity], None]] = None,
+                 use_cache: bool = True):
         self.qid = qid
         self.plan = plan
         self._engine = engine
         self._on_entity = on_entity
+        self.use_cache = use_cache
         self._cv = threading.Condition()
         self._state = _RUNNING
         self._phase = -1
@@ -51,6 +53,11 @@ class QuerySession:
         self._ent_results: dict[int, dict[str, Any]] = {
             i: {} for i in self._cmds}
         self.stats: dict[str, Any] = {"matched": 0, "failed": 0}
+        # cache-hit stats appear only when the engine cache exists, so the
+        # cache-off response dict stays byte-identical to the baseline
+        if getattr(engine, "result_cache", None) is not None:
+            self.stats["cache_full_hits"] = 0
+            self.stats["cache_prefix_hits"] = 0
         self._t0 = time.monotonic()
         self._result: dict | None = None
         self._exc: BaseException | None = None
@@ -80,10 +87,15 @@ class QuerySession:
                     if self._state is not _RUNNING:
                         return
                     for cplan in self.plan.phases[phase_idx]:
-                        ents = self._engine._expand(cplan, self.qid)
+                        ents = self._engine._expand(cplan, self.qid,
+                                                    self.use_cache)
                         if cplan.command.verb == "find":
                             self.stats["matched"] += len(ents)
                         for e in ents:
+                            if e.cache_hit == "full":
+                                self.stats["cache_full_hits"] += 1
+                            elif e.cache_hit == "prefix":
+                                self.stats["cache_prefix_hits"] += 1
                             (to_run if not e.done() else instant).append(e)
                     self._phase = phase_idx
                     self._pending = len(to_run)

@@ -14,6 +14,11 @@ structure first-class instead:
   time: constraint filtering against the metadata store, blob-pointer
   lookup, op-pipeline attachment.  Fan-out is deferred to launch (not
   compile) so a phase sees the writes of every barrier before it.
+- when the engine carries a :class:`~repro.core.result_cache.ResultCache`,
+  ``expand`` consults it per entity: a full ``(eid, pipeline-signature)``
+  hit produces an already-``done()`` entity that skips Queue_1 entirely;
+  a prefix hit re-enters the pipeline at the first uncached op.  Add
+  ingestion invalidates the ingested eid (write-then-read semantics).
 
 Result assembly stays deterministic regardless of execution order: the
 plan records each command's matched-eid order, and the session assembles
@@ -28,6 +33,7 @@ from typing import Any
 import numpy as np
 
 from repro.core.entity import Entity
+from repro.core.result_cache import ResultCache, prefix_signatures
 from repro.query.language import Command
 from repro.query.metadata import MetadataStore
 from repro.storage.store import BlobStore
@@ -56,9 +62,11 @@ class QueryPlan:
 class QueryPlanner:
     """Compiles commands to phases and expands per-command entity fan-out."""
 
-    def __init__(self, meta: MetadataStore, store: BlobStore):
+    def __init__(self, meta: MetadataStore, store: BlobStore,
+                 result_cache: ResultCache | None = None):
         self.meta = meta
         self.store = store
+        self.result_cache = result_cache
 
     # ----------------------------------------------------------- compile
     def compile(self, cmds: list[Command]) -> QueryPlan:
@@ -83,12 +91,19 @@ class QueryPlanner:
         ingestion changes apply to each identically."""
         eid = self.meta.add(kind, properties)
         self.store.put(eid, np.asarray(data))
+        if self.result_cache is not None:
+            # Add barrier invalidation: any cached result keyed on this
+            # eid predates the blob this write just installed
+            self.result_cache.invalidate(eid)
         return eid
 
     # ------------------------------------------------------------ expand
-    def expand(self, cplan: CommandPlan, query_id: str) -> list[Entity]:
+    def expand(self, cplan: CommandPlan, query_id: str,
+               use_cache: bool = True) -> list[Entity]:
         """Fan a command out into entities (ingesting first for Add).
-        Records the matched-eid order on the plan for result assembly."""
+        Records the matched-eid order on the plan for result assembly.
+        ``use_cache=False`` (a ``submit(..., cache=False)`` query)
+        bypasses the result cache for both reads and writes."""
         cmd = cplan.command
         if cmd.verb == "add":
             eids = [self.ingest(cmd.kind, cmd.data, cmd.properties)]
@@ -97,8 +112,45 @@ class QueryPlanner:
             if cmd.limit:
                 eids = eids[: cmd.limit]
         cplan.eids = eids
-        return [self._make_entity(eid, cmd, cplan.index, query_id)
-                for eid in eids]
+        rc = self.result_cache
+        # only Find pipelines are cached: an Add's processed result is
+        # written back to the blob store, so snapshots taken during its
+        # pipeline would be keyed against a blob that no longer exists
+        if rc is None or not use_cache or cmd.verb != "find" \
+                or not cmd.operations:
+            return [self._make_entity(eid, cmd, cplan.index, query_id)
+                    for eid in eids]
+        sigs = prefix_signatures(cmd.operations)
+        n_ops = len(cmd.operations)
+        ents = []
+        for eid in eids:
+            # epoch BEFORE the blob read: if an invalidation lands in
+            # between, this entity's eventual cache puts are refused
+            # (safe direction — worse is a wasted put, never staleness)
+            epoch = rc.epoch(eid)
+            k, cached = rc.longest_prefix(eid, sigs)
+            if k:
+                # resume at the first uncached op (k == n_ops: born done,
+                # never touches Queue_1); the blob load is skipped — the
+                # cached value IS the pipeline state after ops[:k]
+                if k == n_ops and isinstance(cached, np.ndarray):
+                    # a full hit flows straight into the client's result
+                    # dict: hand out a writable copy so hit and miss
+                    # responses behave identically under client mutation
+                    # (prefix hits feed ops instead and never escape raw)
+                    cached = cached.copy()
+                ent = Entity(eid=eid, kind=cmd.kind, data=cached,
+                             metadata=self.meta.get(eid),
+                             ops=list(cmd.operations), op_index=k,
+                             query_id=query_id, cmd_index=cplan.index)
+                ent.cache_hit = "full" if k == n_ops else "prefix"
+            else:
+                ent = self._make_entity(eid, cmd, cplan.index, query_id)
+            ent.cacheable = True
+            ent.cache_sigs = sigs
+            ent.cache_epoch = epoch
+            ents.append(ent)
+        return ents
 
     def _make_entity(self, eid: str, cmd: Command, cmd_index: int,
                      query_id: str) -> Entity:
