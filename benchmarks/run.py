@@ -21,7 +21,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="image|video|cputrace|scaleout|roofline|fusion|"
-                         "serving|native_pool|hotpath")
+                         "serving|native_pool|hotpath|dispatch")
     args = ap.parse_args()
 
     from benchmarks import cpu_trace, image_suite, scaleout, video_suite
@@ -56,6 +56,10 @@ def main() -> None:
     from benchmarks import hotpath
     # also writes repo-root BENCH_hotpath.json (perf trajectory across PRs)
     suites["hotpath"] = lambda: hotpath.run(smoke=not args.full)
+    from benchmarks import dispatch_bench
+    # also writes repo-root BENCH_dispatch.json (cost-router speedup vs
+    # all-native/static + the static-response hash tripwire)
+    suites["dispatch"] = lambda: dispatch_bench.run(smoke=not args.full)
     suites["fusion"] = lambda: (
         image_suite.run_c2(16, fuse=False)
         + [dict(r, name=r["name"] + "_fused")

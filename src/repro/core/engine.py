@@ -29,6 +29,9 @@ from repro.core.event_loop import EventLoop
 from repro.core.remote import RemoteServerPool, TransportModel
 from repro.core.result_cache import ResultCache
 from repro.core.session import QueryFuture, QuerySession
+from repro.query.dispatch import (BackendRouter, NativeBackend, OpCostTracker,
+                                  RemoteBackend, StaticRouter,
+                                  validate_overrides)
 from repro.query.language import parse_query
 from repro.query.metadata import MetadataStore
 from repro.query.planner import CommandPlan, QueryPlanner
@@ -50,7 +53,29 @@ class VDMSAsyncEngine:
                  cache_capacity: int = 0,
                  cache_capacity_bytes: int = 256 << 20,
                  coalesce_window_ms: float = 0.0,
-                 coalesce_max_batch: int = 64):
+                 coalesce_max_batch: int = 64,
+                 dispatch: str = "static",
+                 cost_overrides: dict | None = None,
+                 batcher_group_size: int = 8,
+                 batcher_max_wait_ms: float = 2.0):
+        if dispatch not in ("static", "cost", "native"):
+            raise ValueError(
+                f"dispatch must be 'static' (paper-faithful placement), "
+                f"'cost' (cost-model router) or 'native' (all-native "
+                f"baseline), got {dispatch!r}")
+        if dispatch == "static":
+            if cost_overrides:
+                # a forced regime with no router would be silently inert
+                # — the caller almost certainly forgot dispatch="cost"
+                raise ValueError(
+                    "cost_overrides requires dispatch='cost' or 'native' "
+                    "(dispatch='static' never consults a cost model)")
+        else:
+            # shape-check the knob BEFORE any pool/loop/batcher thread
+            # exists: a malformed override must not leak running threads
+            # (validated under "native" too, where it is merely unused,
+            # so a typo'd regime never passes silently)
+            validate_overrides(cost_overrides)
         self.meta = MetadataStore()
         self.store = BlobStore()
         self.erd = ERD()
@@ -64,14 +89,31 @@ class VDMSAsyncEngine:
         self.result_cache = (ResultCache(cache_capacity,
                                          cache_capacity_bytes)
                              if cache_capacity > 0 else None)
-        self.planner = QueryPlanner(self.meta, self.store,
-                                    result_cache=self.result_cache)
         self._sessions: dict[str, QuerySession] = {}
         self._session_lock = threading.Lock()
         # None -> cpu-bounded pool; 1 -> the paper-faithful single Thread_2
         self.num_native_workers = (num_native_workers
                                    if num_native_workers is not None
                                    else _default_native_workers())
+        # multi-backend dispatch ("static", the default, builds none of
+        # this and stays byte-identical to the paper engine): a per-op
+        # cost tracker calibrated by the native workers, the GroupBatcher
+        # promoted to a backend, and a router the planner consults at
+        # expand time (repro.query.dispatch)
+        self.dispatch = dispatch
+        self.cost_tracker = None
+        self.router = None
+        self.batcher_backend = None
+        if dispatch != "static":
+            self.cost_tracker = OpCostTracker()
+            if dispatch == "cost":
+                # deferred: serving.batcher pulls in the model stack,
+                # which a non-batcher engine never needs
+                from repro.serving.batcher import UDFBatcherBackend
+                self.batcher_backend = UDFBatcherBackend(
+                    group_size=batcher_group_size,
+                    max_wait_s=batcher_max_wait_ms / 1000.0,
+                    tracker=self.cost_tracker)
         self.loop = EventLoop(self.pool, self.erd,
                               fuse_native=fuse_native,
                               batch_remote=batch_remote,
@@ -81,7 +123,22 @@ class VDMSAsyncEngine:
                               is_cancelled=self._is_cancelled,
                               coalesce_window_s=coalesce_window_ms / 1000.0,
                               coalesce_max_batch=coalesce_max_batch,
-                              result_cache=self.result_cache)
+                              result_cache=self.result_cache,
+                              batcher_backend=self.batcher_backend,
+                              cost_tracker=self.cost_tracker)
+        if dispatch == "native":
+            self.router = StaticRouter("native")
+        elif dispatch == "cost":
+            self.batcher_backend.bind(self.loop.queue2, self._is_cancelled)
+            self.router = BackendRouter(
+                [NativeBackend(self.loop, self.cost_tracker),
+                 RemoteBackend(self.pool, self.cost_tracker),
+                 self.batcher_backend],
+                overrides=cost_overrides,
+                tracker=self.cost_tracker)
+        self.planner = QueryPlanner(self.meta, self.store,
+                                    result_cache=self.result_cache,
+                                    router=self.router)
         self._qid = itertools.count()
 
     # ------------------------------------------------------------ ingest
@@ -200,10 +257,34 @@ class VDMSAsyncEngine:
         return (self.result_cache.stats()
                 if self.result_cache is not None else {})
 
+    def dispatch_stats(self) -> dict:
+        """Multi-backend router counters: per-backend placements,
+        handoffs, segments, plus batcher-backend group accounting.
+        ``{"mode": "static"}`` alone when the router is off (not to be
+        confused with ``dispatch_policy``, the remote pool's
+        round-robin/least-loaded server picker)."""
+        out: dict = {"mode": self.dispatch}
+        if self.router is not None:
+            out.update(self.router.stats())
+        if self.batcher_backend is not None:
+            out["batcher"] = self.batcher_backend.stats()
+        return out
+
+    def pending_coalesced(self) -> int:
+        """Entities buffered in open coalescing groups right now."""
+        return self.loop.pending_coalesced()
+
+    def flush_coalesced(self):
+        """Force-dispatch all open coalescing groups (deterministic
+        alternative to waiting out ``coalesce_window_ms``)."""
+        self.loop.flush_coalesced()
+
     def shutdown(self):
         with self._session_lock:
             live = list(self._sessions.values())
         for s in live:            # wake any blocked result() callers
             s.cancel()
+        if self.batcher_backend is not None:
+            self.batcher_backend.shutdown()
         self.loop.shutdown()
         self.pool.shutdown()

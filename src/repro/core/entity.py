@@ -33,6 +33,10 @@ class Entity:
                                              # across the command's fan-out
     cache_epoch: int = 0          # eid write epoch at blob-read time; a
                                   # put against a newer epoch is refused
+    # multi-backend dispatch (set by the planner only when the engine
+    # runs with dispatch != "static"; None reproduces the static rule
+    # "native if op.is_native else remote" exactly):
+    route: Optional[list] = None  # backend name per op, parallel to ops
 
     def current_op(self):
         return self.ops[self.op_index] if self.op_index < len(self.ops) else None

@@ -47,6 +47,24 @@ Beyond-paper knobs, default OFF:
   workers record each cacheable entity's final result, plus an
   intermediate snapshot after every remote/UDF op — the expensive resume
   points for prefix hits.
+- multi-backend dispatch (``batcher_backend`` + ``cost_tracker``, wired
+  by the engine when ``dispatch != "static"``): entities may carry a
+  ``route`` — a backend name per op.  Native workers execute only ops
+  routed ``native`` (including UDF/remote-tagged ops the router placed
+  locally, which get a cache snapshot like any expensive resume point)
+  and hand everything else to Thread_3; Thread_3 sends ``remote``-routed
+  ops down the existing dispatch/coalescing path and ``batcher``-routed
+  ops to the :class:`~repro.serving.batcher.UDFBatcherBackend`, whose
+  group replies come back as ``("batched", entity, result, err)``
+  messages on Queue_2 — the same reply path remote responses ride.
+  ``route=None`` (every static-dispatch entity) reproduces the paper's
+  placement rule exactly.  The ``cost_tracker`` is calibrated online:
+  native workers record per-op execution seconds.
+
+Determinism hooks for tests: ``flush_coalesced()`` force-dispatches all
+open coalescing groups (so tests need not wait out wall-clock windows),
+``pending_coalesced()`` counts currently-buffered entities, and
+``clock`` injects a time source for the window deadlines.
 
 Note the scheduling knobs are NOT paper-faithful by default: the engine
 defaults to a cpu-bounded worker pool and fair per-query lanes.  The
@@ -229,7 +247,10 @@ class EventLoop:
                  straggler_check_s: float = 0.1,
                  coalesce_window_s: float = 0.0,
                  coalesce_max_batch: int = 64,
-                 result_cache=None):
+                 result_cache=None,
+                 batcher_backend=None,
+                 cost_tracker=None,
+                 clock=time.monotonic):
         self.pool = pool
         self.erd = erd
         self.fuse_native = fuse_native
@@ -237,6 +258,14 @@ class EventLoop:
         self.coalesce_window_s = max(0.0, coalesce_window_s)
         self.coalesce_max_batch = max(2, coalesce_max_batch)
         self.result_cache = result_cache
+        self.batcher_backend = batcher_backend
+        self.cost_tracker = cost_tracker
+        self._clock = clock
+        # open coalescing groups (mutated only by Thread_3); the buffered
+        # counter is read cross-thread by pending_coalesced()
+        self._groups: dict[Any, list[Entity]] = {}
+        self._deadlines: dict[Any, float] = {}
+        self._buffered = 0
         self.coalesced_batches = 0
         self.coalesced_entities = 0
         self.num_native_workers = max(1, num_native_workers)
@@ -289,31 +318,66 @@ class EventLoop:
             finally:
                 meter.stop()
 
+    @staticmethod
+    def _backend_for(ent: Entity) -> str:
+        """Backend of the entity's current op: its route when the router
+        placed it, else the paper's static rule (native iff tagged
+        native) — so route=None entities behave byte-identically."""
+        if ent.route is not None and ent.op_index < len(ent.route):
+            return ent.route[ent.op_index]
+        return "native" if ent.current_op().is_native else "remote"
+
     def _run_native(self, ent: Entity):
         while not ent.done():
             if self.is_cancelled(ent.query_id):
                 return             # dropped mid-pipeline; ERD keeps last state
             op = ent.current_op()
-            if not op.is_native:
-                # R-UDF: release the entity to Queue_2 and move on
+            if self._backend_for(ent) != "native":
+                # R-UDF / routed handoff: release to Queue_2 and move on
                 self.queue2.put(("dispatch", ent))
                 return
-            if self.fuse_native:
-                # collect the maximal native run
+            if self.fuse_native and op.is_native:
+                # collect the maximal run of native-table ops that also
+                # STAY on this backend (for routed entities the run stops
+                # at the first op placed elsewhere; route=None fuses
+                # exactly the paper-static run)
                 run = []
                 j = ent.op_index
-                while j < len(ent.ops) and ent.ops[j].is_native:
+                route = ent.route
+                while j < len(ent.ops) and ent.ops[j].is_native \
+                        and (route is None or route[j] == "native"):
                     run.append(ent.ops[j])
                     j += 1
+                t0 = time.monotonic() if self.cost_tracker is not None else 0.0
                 ent.data = run_native_chain(run, ent.data, fuse=True)
+                if self.cost_tracker is not None:
+                    # keep calibration alive under fusion: attribute the
+                    # chain wall evenly across its ops (rough, but far
+                    # better than leaving them at the cold default), and
+                    # the observed output size to the op that produced it
+                    per_op = (time.monotonic() - t0) / len(run)
+                    for k, fused_op in enumerate(run):
+                        self.cost_tracker.observe(
+                            fused_op, per_op,
+                            out_bytes=(getattr(ent.data, "nbytes", None)
+                                       if k == len(run) - 1 else None))
                 ent.op_index = j
                 self.erd.update(ent, f"native:{run[-1].name}")
             else:
+                t0 = time.monotonic() if self.cost_tracker is not None else 0.0
                 ent.data = run_op(op, ent.data)
                 if hasattr(ent.data, "block_until_ready"):
                     ent.data.block_until_ready()
+                if self.cost_tracker is not None:
+                    self.cost_tracker.observe(
+                        op, time.monotonic() - t0,
+                        out_bytes=getattr(ent.data, "nbytes", None))
                 ent.op_index += 1
                 self.erd.update(ent, f"native:{op.name}")
+                if not op.is_native and not ent.done():
+                    # a UDF/remote-tagged op the router placed locally is
+                    # an expensive resume point, same as a remote reply
+                    self._record_cache(ent)
         self._record_cache(ent)
         self.on_entity_done(ent)
 
@@ -331,20 +395,39 @@ class EventLoop:
             rc.put(ent.eid, sigs[ent.op_index - 1], ent.data,
                    epoch=ent.cache_epoch)
 
+    # ------------------------------------------------ coalescing controls
+    def pending_coalesced(self) -> int:
+        """Entities currently buffered in open coalescing groups (the
+        deterministic signal tests poll instead of sleeping out the
+        wall-clock window)."""
+        return self._buffered
+
+    def flush_coalesced(self):
+        """Force-dispatch every open coalescing group now, regardless of
+        window deadlines (injectable-flush test hook; also useful for
+        graceful drains)."""
+        self.queue2.put(("flush_coalesce",))
+
+    def _flush_groups(self, ops):
+        for op in ops:
+            group = self._groups.pop(op)
+            self._deadlines.pop(op, None)
+            self._buffered -= len(group)
+            self._dispatch_group(group)
+
     # ------------------------------------------------------- Thread_3 loop
     def _thread3(self):
         pending: list[Entity] = []  # dispatch batching buffer (window off)
-        # coalescing-window state: one open group per op signature, with
-        # the deadline set by its FIRST member's arrival
-        groups: dict[Any, list[Entity]] = {}
-        deadlines: dict[Any, float] = {}
+        # coalescing-window state lives on self (_groups/_deadlines): one
+        # open group per op signature, deadline set by its FIRST member's
+        # arrival (self._clock-based so tests can inject a time source)
         coalesce = self.coalesce_window_s > 0.0
         last_straggler = time.monotonic()
         while True:
             timeout = self.straggler_check_s
-            if deadlines:
-                timeout = min(timeout, max(0.0, min(deadlines.values())
-                                           - time.monotonic()))
+            if self._deadlines:
+                timeout = min(timeout, max(0.0, min(self._deadlines.values())
+                                           - self._clock()))
             try:
                 msg = self.queue2.get(timeout=timeout)
             except queue.Empty:
@@ -360,21 +443,32 @@ class EventLoop:
                 kind = msg[0]
                 if kind == "dispatch":
                     ent = msg[1]
-                    if coalesce:
+                    if self._backend_for(ent) == "batcher" \
+                            and self.batcher_backend is not None:
+                        self.batcher_backend.submit(ent)
+                    elif coalesce:
                         op = ent.current_op()
-                        group = groups.get(op)
+                        group = self._groups.get(op)
                         if group is None:
-                            group = groups[op] = []
-                            deadlines[op] = now + self.coalesce_window_s
+                            group = self._groups[op] = []
+                            self._deadlines[op] = (self._clock()
+                                                   + self.coalesce_window_s)
                         group.append(ent)
+                        self._buffered += 1
                         if len(group) >= self.coalesce_max_batch:
-                            del groups[op], deadlines[op]
-                            self._dispatch_group(group)
+                            self._flush_groups([op])
                     else:
                         pending.append(ent)
                         if len(pending) >= self.batch_remote:
                             self._flush(pending)
                             pending = []
+                elif kind == "batched":
+                    # batcher-backend group reply: same handoff semantics
+                    # as a remote response
+                    _, ent, result, err = msg
+                    self._handle_batched(ent, result, err)
+                elif kind == "flush_coalesce":
+                    self._flush_groups(list(self._groups))
                 else:
                     # R-UDF-Response callback
                     tag, req, payload = msg
@@ -388,15 +482,13 @@ class EventLoop:
                 self._flush(pending)
                 pending = []
                 self.t3_meter.stop()
-            if deadlines:
-                now = time.monotonic()
-                expired = [op for op, dl in deadlines.items() if dl <= now]
+            if self._deadlines:
+                now = self._clock()
+                expired = [op for op, dl in self._deadlines.items()
+                           if dl <= now]
                 if expired:
                     self.t3_meter.start()
-                    for op in expired:
-                        group = groups.pop(op)
-                        del deadlines[op]
-                        self._dispatch_group(group)
+                    self._flush_groups(expired)
                     self.t3_meter.stop()
 
     def _dispatch_group(self, group: list[Entity]):
@@ -429,6 +521,38 @@ class EventLoop:
             for e in entities:
                 self.pool.dispatch(e, e.current_op(), self.queue2)
 
+    # --------------------------------------------- shared segment tails
+    # one copy of the per-entity reply invariants, used by BOTH the
+    # remote and batcher handlers — the dispatch design promises their
+    # segments hand off identically, so they must share this code
+
+    def _fail_segment(self, ent: Entity, msg: str, stage: str):
+        ent.failed = msg
+        self.erd.update(ent, stage)
+        self.on_entity_done(ent)
+
+    def _complete_segment(self, ent: Entity, result, source: str):
+        op = ent.current_op()
+        ent.data = result
+        ent.op_index += 1
+        self.erd.update(ent, f"{source}:{op.name}")
+        self._record_cache(ent)
+        if ent.done():
+            self.on_entity_done(ent)
+        else:
+            self.enqueue(ent)      # Q1-Enqueue from Thread_3
+
+    def _handle_batched(self, ent: Entity, result, err):
+        """Reply tail for a batcher-backend group member."""
+        if self.is_cancelled(ent.query_id):
+            return                 # cancelled while in the group: drop
+        if err is not None:
+            self._fail_segment(
+                ent, f"batched op {ent.current_op().name} failed: {err}",
+                "batcher-error")
+            return
+        self._complete_segment(ent, result, "batcher")
+
     def _handle_response(self, tag: str, req: Request, payload):
         status, result = self.pool.handle_response(tag, req, payload)
         if status in ("dropped", "requeued"):
@@ -439,18 +563,12 @@ class EventLoop:
             if self.is_cancelled(ent.query_id):
                 continue           # cancelled while in flight: drop silently
             if status == "failed":
-                ent.failed = f"remote op {ent.current_op().name} failed: {payload}"
-                self.erd.update(ent, "remote-error")
-                self.on_entity_done(ent)
+                self._fail_segment(
+                    ent,
+                    f"remote op {ent.current_op().name} failed: {payload}",
+                    "remote-error")
                 continue
-            ent.data = res
-            ent.op_index += 1
-            self.erd.update(ent, f"remote:{req.op.name}")
-            self._record_cache(ent)
-            if ent.done():
-                self.on_entity_done(ent)
-            else:
-                self.enqueue(ent)  # Q1-Enqueue from Thread_3
+            self._complete_segment(ent, res, "remote")
     # ---------------------------------------------------------- shutdown
     def shutdown(self, timeout: float = 5.0):
         """Stop and *join* all loop threads (daemon threads abandoned

@@ -306,6 +306,16 @@ class RemoteServerPool:
     def live_count(self) -> int:
         return sum(s.alive for s in self.servers)
 
+    def pending_entities(self) -> int:
+        """Entities queued + in service across live servers (the remote
+        queue-wait signal the dispatch cost model reads)."""
+        return sum(s.load() for s in self.servers if s.alive)
+
+    def latency_estimate(self) -> float:
+        """Amortized per-entity latency moving estimate (also feeds the
+        dispatch cost model's remote queue-wait term)."""
+        return self._lat_est
+
     def shutdown(self, timeout: float = 5.0):
         for s in self.servers:
             s.kill(join_timeout=None)   # signal everyone first ...

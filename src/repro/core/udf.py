@@ -17,6 +17,7 @@ import threading
 from typing import Any, Callable
 
 _REGISTRY: dict[str, Callable] = {}
+_BATCHED: dict[str, Callable] = {}
 _LOCK = threading.Lock()
 
 
@@ -24,6 +25,27 @@ def register_udf(name: str, fn: Callable) -> None:
     """fn(img_or_frames, **options) -> transformed array."""
     with _LOCK:
         _REGISTRY[name] = fn
+
+
+def register_batched_udf(name: str, fn: Callable) -> None:
+    """Group-execution variant of a UDF: ``fn(list_of_images, **options)
+    -> list_of_images``.  Registering one makes the op eligible for the
+    batcher backend (repro.serving.batcher.UDFBatcherBackend), which the
+    cost router can then pick when amortizing a group beats per-entity
+    execution.  MUST be result-equivalent to the per-entity UDF of the
+    same name — the router treats backends as interchangeable."""
+    with _LOCK:
+        _BATCHED[name] = fn
+
+
+def get_batched_udf(name: str) -> Callable:
+    with _LOCK:
+        return _BATCHED[name]
+
+
+def has_batched_udf(name: str) -> bool:
+    with _LOCK:
+        return name in _BATCHED
 
 
 def get_udf(name: str) -> Callable:
@@ -54,6 +76,7 @@ def register_model_udf(name: str, arch: str = "qwen3-0.6b", *,
     """
     import jax
     import jax.numpy as jnp
+    import numpy as np
     from repro.configs import get_arch
     from repro.distributed.sharding import ShardingCtx
     from repro.models import get_model
@@ -66,10 +89,12 @@ def register_model_udf(name: str, arch: str = "qwen3-0.6b", *,
     sh = ShardingCtx(mesh=None)
     lock = threading.Lock()
 
+    def feats_of(img):
+        return jnp.clip((img * 255).astype(jnp.int32).mean(axis=(0, 1)),
+                        0, cfg.vocab_size - 1).astype(jnp.int32)
+
     def udf(img, **_):
-        feats = jnp.clip((img * 255).astype(jnp.int32).mean(axis=(0, 1)),
-                         0, cfg.vocab_size - 1).astype(jnp.int32)
-        prompt = {"tokens": feats[None, :]}
+        prompt = {"tokens": feats_of(img)[None, :]}
         if cfg.frontend == "vit_stub":
             P = cfg.num_patches
             pe = jax.image.resize(img, (P, 8, 3), "linear").reshape(P, -1)
@@ -81,3 +106,27 @@ def register_model_udf(name: str, arch: str = "qwen3-0.6b", *,
         return draw_text(img, label, 4, 4)
 
     register_udf(name, udf)
+
+    if cfg.frontend != "vit_stub":
+        # Grouped serving path: the same model behind a GroupBatcher, so
+        # the dispatch router can amortize prefill+decode over a group
+        # instead of paying full inference per entity.  Greedy decoding
+        # (temperature 0) makes batched == sequential token-for-token
+        # (tests/test_batcher.py), so the label — the argmax bucket of
+        # the LAST decoded token — is identical to the per-entity UDF.
+        # vit_stub frontends are excluded: the per-entity prompt carries
+        # image-derived patch embeds the group prefill does not.
+        from repro.serving.batcher import GroupBatcher
+
+        batcher = GroupBatcher(model, params, group_size=8,
+                               max_new_default=steps, sh=sh, temperature=0.0)
+
+        def batched(imgs, **_):
+            with lock:
+                reqs = [batcher.submit(np.asarray(feats_of(img)),
+                                       max_new=steps) for img in imgs]
+                batcher.run_until_idle()
+            return [draw_text(img, labels[int(r.result(30)[-1]) % len(labels)],
+                              4, 4) for img, r in zip(imgs, reqs)]
+
+        register_batched_udf(name, batched)

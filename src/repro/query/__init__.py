@@ -1,5 +1,9 @@
-"""Query layer: VDMS-style JSON language, metadata store, and the
-per-query planner that compiles commands into phased execution plans."""
+"""Query layer: VDMS-style JSON language, metadata store, the per-query
+planner that compiles commands into phased execution plans, and the
+cost-model multi-backend dispatch router the planner consults."""
+from repro.query.dispatch import (Backend, BackendRouter,  # noqa: F401
+                                  NativeBackend, OpCostTracker,
+                                  RemoteBackend, StaticRouter)
 from repro.query.language import Command, parse_query  # noqa: F401
 from repro.query.metadata import MetadataStore  # noqa: F401
 from repro.query.planner import CommandPlan, QueryPlan, QueryPlanner  # noqa: F401

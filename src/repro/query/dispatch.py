@@ -1,0 +1,399 @@
+"""Cost-model multi-backend dispatch (ROADMAP: "multi-backend dispatch").
+
+The paper's planner hard-codes placement — "native unless the op says
+remote".  This module makes placement a *decision*: a per-op cost model
+estimates how long each op would take on each available backend, and a
+:class:`BackendRouter` the planner consults at ``expand`` time assigns
+every op of an entity's chain to the backend where it is estimated to
+finish soonest, splitting one chain into native → remote → batcher
+segments when that wins (handoff rides the existing Queue_2 / Thread_3
+reply path).
+
+Backends (all behind the common :class:`Backend` protocol):
+
+- **native**   — the event loop's native worker pool (Queue_1);
+- **remote**   — the κ remote-server pool (rides the existing per-entity
+  dispatch and cross-session coalescing paths unchanged);
+- **batcher**  — grouped UDF execution
+  (:class:`repro.serving.batcher.UDFBatcherBackend`): ops with a
+  registered batched variant (``register_batched_udf`` — e.g. model
+  UDFs, whose GroupBatcher amortizes prefill+decode over a group).
+
+Cost model (ARCHITECTURE.md "Dispatch" has the diagram)::
+
+    native(op)  = op_est · (1 + util)          + backlog_native  / W
+    remote(op)  = transport.cost(nbytes) + op_est
+                  + pending_entities · lat_est / κ + backlog_remote / κ
+    batcher(op) = wait/2 + op_est / G          + backlog_batcher
+
+where ``op_est`` is an EWMA of observed per-op execution seconds
+(:class:`OpCostTracker`, calibrated online by the native workers and the
+batcher), ``util`` is the native pool's recent BusyMeter utilization,
+``lat_est`` the remote pool's amortized per-entity latency estimate, κ
+the live server count, W the native worker count, G the batcher group
+size, and each ``backlog`` a leaky-bucket ledger of work the router
+itself recently placed on that backend (so one expand's fan-out spreads
+across backends instead of herding onto the first-cheapest one).
+
+Routing minimizes total estimated cost over the chain with a dynamic
+program that charges ``handoff_s`` for every backend switch (a switch
+costs a Queue_2 hop and possibly a batching window), entered at the
+native backend — entities always start life on Queue_1.  Chains resumed
+from a result-cache prefix hit are routed from their resume point only
+(``start=op_index``).
+
+``cost_overrides={op_name: {backend: seconds}}`` pins estimates for
+benchmarks and tests (forced cost regimes); an override never makes a
+backend eligible that ``can_run`` rejects.
+
+The default engine (``dispatch="static"``) builds none of this: entities
+carry ``route=None`` and the event loop reproduces the paper's rule
+byte-identically.
+"""
+from __future__ import annotations
+
+import abc
+import threading
+import time
+from typing import Optional
+
+from repro.core.result_cache import op_signature
+
+NATIVE = "native"
+REMOTE = "remote"
+BATCHER = "batcher"
+
+_INF = float("inf")
+
+
+def validate_overrides(overrides: dict | None,
+                       known=(NATIVE, REMOTE, BATCHER)) -> dict:
+    """Shape-check a ``cost_overrides`` mapping ({op_name: {backend:
+    seconds}}).  The engine calls this BEFORE spawning any pool/loop/
+    batcher threads, so a malformed knob raises without leaking them."""
+    overrides = overrides or {}
+    for op_name, per_backend in overrides.items():
+        if not isinstance(per_backend, dict):
+            raise ValueError(
+                f"cost_overrides[{op_name!r}] must be a dict "
+                f"{{backend: seconds}}, got {per_backend!r}")
+        unknown = set(per_backend) - set(known)
+        if unknown:
+            raise ValueError(
+                f"cost_overrides[{op_name!r}] names unknown "
+                f"backend(s) {sorted(unknown)}; known: {sorted(known)}")
+    return overrides
+
+
+class OpCostTracker:
+    """EWMA of observed per-op execution seconds, keyed by canonical op
+    signature.  ``kind="native"`` samples come from the native workers
+    (pure op compute — also the best available estimate for the op's
+    compute on a remote server); ``kind="batched"`` samples are the
+    *amortized per-entity* seconds of a batcher group run."""
+
+    def __init__(self, default_s: float = 1e-3, alpha: float = 0.25):
+        self.default_s = default_s
+        self.alpha = alpha
+        self._lock = threading.Lock()
+        self._est: dict[str, dict[tuple, float]] = {"native": {}, "batched": {}}
+        self._out_bytes: dict[tuple, float] = {}
+
+    def observe(self, op, seconds: float, kind: str = "native",
+                out_bytes: int | None = None):
+        key = op_signature(op)
+        with self._lock:
+            table = self._est[kind]
+            prev = table.get(key)
+            table[key] = (seconds if prev is None
+                          else (1 - self.alpha) * prev + self.alpha * seconds)
+            if out_bytes is not None:
+                prev_b = self._out_bytes.get(key)
+                self._out_bytes[key] = (
+                    float(out_bytes) if prev_b is None
+                    else (1 - self.alpha) * prev_b + self.alpha * out_bytes)
+
+    def estimate(self, op, kind: str = "native",
+                 default: float | None = None) -> float:
+        with self._lock:
+            est = self._est[kind].get(op_signature(op))
+        return est if est is not None else (
+            default if default is not None else self.default_s)
+
+    def out_bytes(self, op, default: float = 0.0) -> float:
+        """EWMA of the op's observed OUTPUT payload size — lets the
+        router thread realistic payloads through a chain (a post-resize
+        remote op is costed on the small intermediate, not the original
+        blob)."""
+        with self._lock:
+            b = self._out_bytes.get(op_signature(op))
+        return b if b is not None else default
+
+    def known(self, op, kind: str = "native") -> bool:
+        with self._lock:
+            return op_signature(op) in self._est[kind]
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {kind: dict(table) for kind, table in self._est.items()}
+
+
+class LoadLedger:
+    """Leaky bucket of *projected* work-seconds the router has placed on
+    one backend.  Placements add their estimated seconds; the bucket
+    drains at the backend's parallel capacity (``drain_rate()``
+    work-seconds per wall second), so the queue-wait term a later
+    placement sees is ``backlog_s() / capacity`` — the feedback that
+    spreads a single expand's fan-out across backends."""
+
+    def __init__(self, drain_rate, clock=time.monotonic):
+        self._drain_rate = drain_rate
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._backlog = 0.0
+        self._last = clock()
+
+    def _decay_locked(self):
+        now = self._clock()
+        self._backlog = max(0.0, self._backlog
+                            - (now - self._last) * max(1e-9, self._drain_rate()))
+        self._last = now
+
+    def add(self, seconds: float):
+        with self._lock:
+            self._decay_locked()
+            self._backlog += max(0.0, seconds)
+
+    def backlog_s(self) -> float:
+        with self._lock:
+            self._decay_locked()
+            return self._backlog
+
+
+class Backend(abc.ABC):
+    """What the router needs from an execution backend.  Execution
+    mechanics stay where they live (event loop / remote pool / batcher
+    worker); this protocol only exposes placement-relevant surface."""
+
+    name: str = "?"
+
+    @abc.abstractmethod
+    def can_run(self, op) -> bool:
+        """Whether this backend can execute ``op`` at all (an override
+        never bypasses this)."""
+
+    @abc.abstractmethod
+    def estimate(self, op, payload_bytes: int) -> float:
+        """Estimated seconds for ``op`` on this backend right now,
+        including queueing/transport/amortization terms."""
+
+    @abc.abstractmethod
+    def queue_depth(self) -> int:
+        """Entities currently waiting on this backend."""
+
+    def note_placed(self, op):
+        """Router feedback: ``op`` was just routed here; add its
+        projected work to the backend's ledger.  Default: no ledger."""
+
+
+class NativeBackend(Backend):
+    """The event loop's native worker pool seen as a routing target."""
+
+    name = NATIVE
+
+    def __init__(self, loop, tracker: OpCostTracker, *,
+                 util_window_s: float = 0.25):
+        self.loop = loop
+        self.tracker = tracker
+        self.util_window_s = util_window_s
+        self.ledger = LoadLedger(lambda: max(1, loop.num_native_workers))
+        self._util_cache = (0.0, -_INF)   # (value, measured_at)
+
+    def can_run(self, op) -> bool:
+        return True          # run_op resolves every op name locally
+
+    def utilization(self) -> float:
+        """Busy fraction of the pool over the recent window, in [0, 1].
+        Memoized for a fraction of the window: route() calls this per op
+        per entity, and the underlying BusyMeter scan takes every
+        per-worker meter lock — rescanning inside one expand's fan-out
+        would contend the native pool for identical answers."""
+        val, at = self._util_cache
+        now = time.monotonic()
+        if now - at < self.util_window_s / 4.0:
+            return val
+        w = self.util_window_s
+        busy = self.loop.t2_meter.busy_seconds(since=now - w)
+        val = min(1.0, busy / (w * max(1, self.loop.num_native_workers)))
+        self._util_cache = (val, now)
+        return val
+
+    def estimate(self, op, payload_bytes: int) -> float:
+        workers = max(1, self.loop.num_native_workers)
+        base = self.tracker.estimate(op)
+        return base * (1.0 + self.utilization()) \
+            + self.ledger.backlog_s() / workers
+
+    def queue_depth(self) -> int:
+        return self.loop.queue1.qsize()
+
+    def note_placed(self, op):
+        self.ledger.add(self.tracker.estimate(op))
+
+
+class RemoteBackend(Backend):
+    """The κ remote-server pool seen as a routing target."""
+
+    name = REMOTE
+
+    def __init__(self, pool, tracker: OpCostTracker):
+        self.pool = pool
+        self.tracker = tracker
+        self.ledger = LoadLedger(lambda: max(1, pool.live_count()))
+
+    def can_run(self, op) -> bool:
+        return self.pool.live_count() > 0
+
+    def estimate(self, op, payload_bytes: int) -> float:
+        live = self.pool.live_count()
+        if not live:
+            return _INF
+        t = self.pool.transport
+        queue_wait = (self.pool.pending_entities()
+                      * self.pool.latency_estimate()) / live
+        return t.cost(payload_bytes) + self.tracker.estimate(op) \
+            + queue_wait + self.ledger.backlog_s() / live
+
+    def queue_depth(self) -> int:
+        return self.pool.pending_entities()
+
+    def note_placed(self, op):
+        self.ledger.add(self.tracker.estimate(op)
+                        + self.pool.transport.service_time_s)
+
+
+class StaticRouter:
+    """Force every op onto one backend — ``dispatch="native"``, the
+    all-native benchmark baseline (any backend name works)."""
+
+    def __init__(self, backend: str = NATIVE):
+        self.backend = backend
+        self._lock = threading.Lock()
+        self.chains_routed = 0
+        self.ops_routed = 0
+
+    def route(self, ops, start: int = 0, payload_bytes: int = 0) -> list:
+        with self._lock:
+            self.chains_routed += 1
+            self.ops_routed += len(ops) - start
+        return [self.backend] * len(ops)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"placements": {self.backend: self.ops_routed},
+                    "handoffs": 0, "segments": self.chains_routed,
+                    "chains_routed": self.chains_routed}
+
+
+class BackendRouter:
+    """Assigns each op of a chain to a backend by minimizing total
+    estimated cost + ``handoff_s`` per backend switch (dynamic program
+    over (op, backend); entry state is the native backend, because
+    entities are always launched onto Queue_1)."""
+
+    def __init__(self, backends: list[Backend], *,
+                 overrides: dict | None = None,
+                 handoff_s: float = 5e-4,
+                 tracker: OpCostTracker | None = None):
+        self.backends = {b.name: b for b in backends}
+        self.handoff_s = handoff_s
+        self.overrides = validate_overrides(overrides,
+                                            known=tuple(self.backends))
+        self.tracker = tracker   # for payload propagation through chains
+        self._lock = threading.Lock()
+        self.placements = {b.name: 0 for b in backends}
+        self.handoffs = 0
+        self.segments = 0
+        self.chains_routed = 0
+
+    # ----------------------------------------------------------- costing
+    def cost(self, op, backend: str, payload_bytes: int = 0) -> float:
+        """Estimated seconds of ``op`` on ``backend`` (inf when the
+        backend cannot run it — overrides never bypass ``can_run``)."""
+        b = self.backends[backend]
+        if not b.can_run(op):
+            return _INF
+        ov = self.overrides.get(op.name)
+        if ov is not None and backend in ov:
+            return float(ov[backend])
+        return b.estimate(op, payload_bytes)
+
+    # ----------------------------------------------------------- routing
+    def route(self, ops, start: int = 0,
+              payload_bytes: int = 0) -> Optional[list]:
+        """Backend name per op for ``ops[start:]`` (``route[:start]`` is
+        filled with ``native`` — those ops already ran, e.g. a cache
+        prefix hit resumes at ``start``).  Returns None for an empty
+        tail (nothing to place)."""
+        n = len(ops)
+        if start >= n:
+            return None
+        names = list(self.backends)
+        # dp over ops[start:]: cost to finish op i on backend b.  The
+        # payload estimate is threaded THROUGH the chain: each op's cost
+        # uses the previous op's observed output-size EWMA (falling back
+        # to the entry payload), so a post-downscale remote op is costed
+        # on the small intermediate, not the original blob.
+        pb = float(payload_bytes)
+        best: dict[str, float] = {}
+        parent: list[dict[str, str]] = []
+        for i, op in enumerate(ops[start:]):
+            step = {b: self.cost(op, b, pb) for b in names}
+            if self.tracker is not None:
+                pb = self.tracker.out_bytes(op, default=pb)
+            if i == 0:
+                cur = {b: step[b] + (self.handoff_s if b != NATIVE else 0.0)
+                       for b in names}
+                parent.append({b: "" for b in names})
+            else:
+                cur, par = {}, {}
+                for b in names:
+                    prev_b = min(
+                        names,
+                        key=lambda p: best[p]
+                        + (self.handoff_s if p != b else 0.0))
+                    cur[b] = step[b] + best[prev_b] \
+                        + (self.handoff_s if prev_b != b else 0.0)
+                    par[b] = prev_b
+                parent.append(par)
+            best = cur
+        end = min(names, key=lambda b: best[b])
+        chosen = [end]
+        for par in reversed(parent[1:]):
+            chosen.append(par[chosen[-1]])
+        chosen.reverse()
+        route = [NATIVE] * start + chosen
+        # feedback + stats
+        handoffs = sum(a != b for a, b in zip(chosen, chosen[1:]))
+        for b_name, op in zip(chosen, ops[start:]):
+            self.backends[b_name].note_placed(op)
+        with self._lock:
+            self.chains_routed += 1
+            self.handoffs += handoffs
+            self.segments += handoffs + 1
+            for b_name in chosen:
+                self.placements[b_name] += 1
+        return route
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        with self._lock:
+            out = {
+                "placements": dict(self.placements),
+                "handoffs": self.handoffs,
+                "segments": self.segments,
+                "chains_routed": self.chains_routed,
+            }
+        out["queue_depths"] = {name: b.queue_depth()
+                               for name, b in self.backends.items()}
+        return out

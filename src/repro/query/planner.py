@@ -19,6 +19,12 @@ structure first-class instead:
   hit produces an already-``done()`` entity that skips Queue_1 entirely;
   a prefix hit re-enters the pipeline at the first uncached op.  Add
   ingestion invalidates the ingested eid (write-then-read semantics).
+- when the engine carries a dispatch router
+  (:class:`~repro.query.dispatch.BackendRouter`, ``dispatch !=
+  "static"``), ``expand`` also routes each entity's remaining op chain
+  across backends — AFTER the cache lookup, so a prefix-resumed entity
+  is routed from its resume op only, never for work the cache already
+  paid for.
 
 Result assembly stays deterministic regardless of execution order: the
 plan records each command's matched-eid order, and the session assembles
@@ -63,10 +69,12 @@ class QueryPlanner:
     """Compiles commands to phases and expands per-command entity fan-out."""
 
     def __init__(self, meta: MetadataStore, store: BlobStore,
-                 result_cache: ResultCache | None = None):
+                 result_cache: ResultCache | None = None,
+                 router=None):
         self.meta = meta
         self.store = store
         self.result_cache = result_cache
+        self.router = router      # BackendRouter | StaticRouter | None
 
     # ----------------------------------------------------------- compile
     def compile(self, cmds: list[Command]) -> QueryPlan:
@@ -118,7 +126,8 @@ class QueryPlanner:
         # pipeline would be keyed against a blob that no longer exists
         if rc is None or not use_cache or cmd.verb != "find" \
                 or not cmd.operations:
-            return [self._make_entity(eid, cmd, cplan.index, query_id)
+            return [self._route(self._make_entity(eid, cmd, cplan.index,
+                                                  query_id))
                     for eid in eids]
         sigs = prefix_signatures(cmd.operations)
         n_ops = len(cmd.operations)
@@ -149,8 +158,19 @@ class QueryPlanner:
             ent.cacheable = True
             ent.cache_sigs = sigs
             ent.cache_epoch = epoch
-            ents.append(ent)
+            ents.append(self._route(ent))
         return ents
+
+    def _route(self, ent: Entity) -> Entity:
+        """Multi-backend placement for the entity's REMAINING ops
+        (``op_index`` onward — a cache prefix hit resumes mid-chain and
+        is only routed from there).  No router (``dispatch="static"``)
+        leaves ``route=None``: the event loop's paper-faithful rule."""
+        if self.router is not None and not ent.done():
+            ent.route = self.router.route(
+                ent.ops, start=ent.op_index,
+                payload_bytes=getattr(ent.data, "nbytes", 0))
+        return ent
 
     def _make_entity(self, eid: str, cmd: Command, cmd_index: int,
                      query_id: str) -> Entity:

@@ -1,6 +1,12 @@
 """Cross-session remote coalescing: window batching, reply fan-out,
 per-query cancellation inside shared batches, and batch-aware remote
-accounting (cost_batch, entity-weighted load, straggler estimate)."""
+accounting (cost_batch, entity-weighted load, straggler estimate).
+
+Timing-independence: tests that need work coalesced into one batch use
+a window far longer than any test run (nothing auto-flushes) and drive
+the flush themselves — poll ``pending_coalesced()`` until the expected
+entities are buffered, then ``flush_coalesced()``.  No assertion depends
+on wall-clock windows, so CI speed cannot change what gets grouped."""
 import queue
 import threading
 import time
@@ -16,7 +22,9 @@ from repro.core.remote import (RemoteServerPool, TransportModel,
                                _batch_size)
 
 FAST = TransportModel(network_latency_s=0.001, service_time_s=0.002)
-SLOW = TransportModel(network_latency_s=0.001, service_time_s=0.05)
+
+# a window no test waits out: grouping is decided by explicit flushes
+NEVER_MS = 600_000.0
 
 REMOTE_PIPE = [
     {"type": "resize", "width": 24, "height": 24},
@@ -43,24 +51,45 @@ def _find(category="lfw", ops=REMOTE_PIPE):
                            "operations": ops}}]
 
 
+def _flush_at(eng, expect: int, timeout: float = 30.0):
+    """Wait until exactly ``expect`` entities sit in open coalescing
+    groups, then force-dispatch them as batches (deterministic stand-in
+    for window expiry)."""
+    deadline = time.monotonic() + timeout
+    while eng.pending_coalesced() < expect and time.monotonic() < deadline:
+        time.sleep(0.002)
+    assert eng.pending_coalesced() == expect, \
+        f"buffered {eng.pending_coalesced()}, expected {expect}"
+    eng.flush_coalesced()
+
+
+def _execute_flushed(eng, query, expect: int, timeout: float = 60.0, **kw):
+    """execute() against a never-expiring window: submit, flush once the
+    expected remote fan-out is buffered, then collect."""
+    fut = eng.submit(query, **kw)
+    _flush_at(eng, expect, timeout)
+    return fut.result(timeout=timeout)
+
+
 # ------------------------------------------------------------ coalescing
 def test_coalesced_results_match_per_entity_dispatch():
     eng_per = _mk_engine()
-    eng_co = _mk_engine(coalesce_window_ms=20)
+    eng_co = _mk_engine(coalesce_window_ms=NEVER_MS)
     try:
         _add_images(eng_per, 16)
         _add_images(eng_co, 16)
         r_per = eng_per.execute(_find(), timeout=60)
-        r_co = eng_co.execute(_find(), timeout=60)
+        r_co = _execute_flushed(eng_co, _find(), expect=16)
         assert list(r_per["entities"]) == list(r_co["entities"])
         for eid in r_per["entities"]:
             np.testing.assert_array_equal(np.asarray(r_per["entities"][eid]),
                                           np.asarray(r_co["entities"][eid]))
         u = eng_co.utilization()
-        assert u["coalesced_batches"] >= 1
-        assert u["coalesced_entities"] >= 2
-        # transport amortization is visible: fewer requests than entities
-        assert u["remote_dispatched"] < eng_per.utilization()["remote_dispatched"]
+        # exactly one flush of all 16: one batched request
+        assert u["coalesced_batches"] == 1
+        assert u["coalesced_entities"] == 16
+        assert u["remote_dispatched"] == 1
+        assert eng_per.utilization()["remote_dispatched"] == 16
     finally:
         eng_per.shutdown()
         eng_co.shutdown()
@@ -78,56 +107,113 @@ def test_window_off_by_default_keeps_per_entity_dispatch():
         eng.shutdown()
 
 
-def test_entities_from_different_sessions_share_one_batch():
-    eng = _mk_engine(coalesce_window_ms=250, coalesce_max_batch=64)
+def test_window_expiry_flushes_without_explicit_flush():
+    # the wall-clock expiry path still works end to end (completion and
+    # correctness only — nothing here asserts WHAT got grouped, which is
+    # the timing-dependent part the explicit-flush tests pin down)
+    eng_per = _mk_engine()
+    eng = _mk_engine(coalesce_window_ms=10)
+    try:
+        _add_images(eng_per, 6)
+        _add_images(eng, 6)
+        r_per = eng_per.execute(_find(), timeout=60)
+        r = eng.execute(_find(), timeout=60)
+        assert r["stats"]["failed"] == 0
+        for eid in r_per["entities"]:
+            np.testing.assert_array_equal(np.asarray(r_per["entities"][eid]),
+                                          np.asarray(r["entities"][eid]))
+    finally:
+        eng_per.shutdown()
+        eng.shutdown()
+
+
+def test_flush_coalesced_with_nothing_buffered_is_harmless():
+    eng = _mk_engine(coalesce_window_ms=NEVER_MS)
     try:
         _add_images(eng, 4)
-        eng.execute(_find(), cache=False, timeout=60)   # jit warmup
+        eng.flush_coalesced()                  # empty flush: no-op
+        assert eng.pending_coalesced() == 0
+        r = _execute_flushed(eng, _find(), expect=4)
+        assert r["stats"]["failed"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_max_batch_flushes_before_any_window():
+    # coalesce_max_batch caps a group even while the window never
+    # expires: 8 entities with max_batch 4 dispatch as two full batches
+    # without a single explicit flush
+    eng = _mk_engine(coalesce_window_ms=NEVER_MS, coalesce_max_batch=4)
+    try:
+        _add_images(eng, 8)
+        r = eng.execute(_find(), timeout=60)
+        assert r["stats"]["failed"] == 0
+        u = eng.utilization()
+        assert u["coalesced_batches"] == 2
+        assert u["coalesced_entities"] == 8
+        assert u["remote_dispatched"] == 2
+    finally:
+        eng.shutdown()
+
+
+def test_entities_from_different_sessions_share_one_batch():
+    eng = _mk_engine(coalesce_window_ms=NEVER_MS, coalesce_max_batch=64)
+    try:
+        _add_images(eng, 4)
+        _execute_flushed(eng, _find(), expect=4, cache=False)   # jit warmup
         base = eng.utilization()["coalesced_entities"]
         futs = [eng.submit(_find()) for _ in range(2)]
+        _flush_at(eng, expect=8)       # both sessions buffered together
         for f in futs:
             r = f.result(timeout=60)
             assert r["stats"]["failed"] == 0
         grouped = eng.utilization()["coalesced_entities"] - base
-        # the window is generous: both sessions' 4 remote ops coalesce,
-        # so at least one batch mixed the two sessions (> 4 entities)
-        assert grouped >= 6, f"only {grouped} entities coalesced"
+        assert grouped == 8            # one batch mixed the two sessions
     finally:
         eng.shutdown()
 
 
 def test_cancel_drops_only_that_querys_members_from_shared_batch():
-    eng = _mk_engine(num_remote_servers=1, transport=SLOW,
-                     coalesce_window_ms=150, coalesce_max_batch=64)
+    eng = _mk_engine(num_remote_servers=1,
+                     coalesce_window_ms=NEVER_MS, coalesce_max_batch=64)
     try:
         _add_images(eng, 6)
         doomed = eng.submit(_find())
         kept = eng.submit(_find())
-        time.sleep(0.05)          # both sessions' ops sit in one window
+        # both sessions' remote ops sit buffered in ONE open group; the
+        # cancel lands while they are still buffered, so the flush must
+        # drop exactly doomed's six members and dispatch kept's six
+        deadline = time.monotonic() + 30
+        while eng.pending_coalesced() < 12 and time.monotonic() < deadline:
+            time.sleep(0.002)
+        assert eng.pending_coalesced() == 12
         assert doomed.cancel()
         with pytest.raises(CancelledError):
             doomed.result(timeout=5)
-        r = kept.result(timeout=120)
+        eng.flush_coalesced()
+        r = kept.result(timeout=60)
         assert r["stats"]["matched"] == 6
         assert r["stats"]["failed"] == 0
+        assert eng.utilization()["coalesced_entities"] == 6  # kept's only
         deadline = time.monotonic() + 10
         while eng.pool.inflight and time.monotonic() < deadline:
             time.sleep(0.01)
         assert not eng.pool.inflight
         # engine stays healthy for follow-up queries
-        r2 = eng.execute(_find(), timeout=120)
+        r2 = _execute_flushed(eng, _find(), expect=6)
         assert r2["stats"]["failed"] == 0
     finally:
         eng.shutdown()
 
 
 def test_coalescing_composes_with_result_cache():
-    eng = _mk_engine(coalesce_window_ms=20, cache_capacity=256)
+    eng = _mk_engine(coalesce_window_ms=NEVER_MS, cache_capacity=256)
     try:
         _add_images(eng, 8)
-        r1 = eng.execute(_find(), timeout=60)
-        r2 = eng.execute(_find(), timeout=60)
-        assert r2["stats"]["cache_full_hits"] == 8
+        r1 = _execute_flushed(eng, _find(), expect=8)   # populates cache
+        r2 = eng.execute(_find(), timeout=60)           # full hits: no
+        assert r2["stats"]["cache_full_hits"] == 8      # remote work at all
+        assert eng.pending_coalesced() == 0
         for eid in r1["entities"]:
             np.testing.assert_array_equal(np.asarray(r1["entities"][eid]),
                                           np.asarray(r2["entities"][eid]))

@@ -1,0 +1,554 @@
+"""Cost-model multi-backend dispatch: router placement under forced
+cost regimes, segment-handoff correctness, cache-resume-aware routing,
+and the static mode's byte-identity with the paper-faithful engine."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import VDMSAsyncEngine
+from repro.core.pipeline import make_op
+from repro.core.remote import RemoteServerPool, TransportModel
+from repro.core.udf import register_batched_udf, register_udf
+from repro.query.dispatch import (BackendRouter, Backend, NativeBackend,
+                                  OpCostTracker, RemoteBackend, StaticRouter,
+                                  BATCHER, NATIVE, REMOTE)
+
+FAST = TransportModel(network_latency_s=0.001, service_time_s=0.002)
+
+# cheap deterministic batchable UDF: per-entity and batched variants are
+# result-equivalent by construction (the Backend-protocol contract)
+register_udf("dsp_double", lambda img, factor=2.0: np.asarray(img) * factor)
+register_batched_udf(
+    "dsp_double",
+    lambda imgs, factor=2.0: [np.asarray(i) * factor for i in imgs])
+
+MIXED_PIPE = [
+    {"type": "resize", "width": 16, "height": 16},
+    {"type": "remote", "url": "u", "options": {"id": "grayscale"}},
+    {"type": "udf", "options": {"id": "dsp_double", "factor": 2.0}},
+    {"type": "threshold", "value": 0.4},
+]
+
+SPLIT_OVERRIDES = {
+    # transport-bound regime for grayscale (remote forced cheap), model
+    # regime for dsp_double (batcher forced cheap): the chain splits
+    # native -> remote -> batcher -> native
+    "grayscale": {"remote": 1e-6, "native": 10.0, "batcher": 10.0},
+    "dsp_double": {"batcher": 1e-6, "native": 10.0, "remote": 10.0},
+}
+
+
+def _mk_engine(**kw):
+    kw.setdefault("num_remote_servers", 2)
+    kw.setdefault("transport", FAST)
+    return VDMSAsyncEngine(**kw)
+
+
+def _add_images(eng, n=6, size=24, category="dsp"):
+    rng = np.random.default_rng(3)
+    for i in range(n):
+        img = rng.uniform(0, 1, (size, size, 3)).astype(np.float32)
+        eng.add_entity("image", img, {"category": category, "idx": i})
+
+
+def _find(category="dsp", ops=MIXED_PIPE):
+    return [{"FindImage": {"constraints": {"category": ["==", category]},
+                           "operations": ops}}]
+
+
+def _assert_same_entities(a: dict, b: dict):
+    assert list(a["entities"]) == list(b["entities"])
+    for eid in a["entities"]:
+        np.testing.assert_array_equal(np.asarray(a["entities"][eid]),
+                                      np.asarray(b["entities"][eid]))
+
+
+# ----------------------------------------------------- static byte-identity
+def test_default_engine_is_static_with_no_router():
+    eng = _mk_engine()
+    try:
+        assert eng.dispatch == "static"
+        assert eng.router is None
+        assert eng.batcher_backend is None
+        assert eng.cost_tracker is None
+        assert eng.dispatch_stats() == {"mode": "static"}
+    finally:
+        eng.shutdown()
+
+
+def test_static_response_identical_to_default_engine():
+    eng_def = _mk_engine()
+    eng_sta = _mk_engine(dispatch="static")
+    try:
+        _add_images(eng_def)
+        _add_images(eng_sta)
+        r_def = eng_def.execute(_find(), timeout=60)
+        r_sta = eng_sta.execute(_find(), timeout=60)
+        _assert_same_entities(r_def, r_sta)
+        assert r_def["stats"]["matched"] == r_sta["stats"]["matched"]
+        assert r_def["stats"]["failed"] == r_sta["stats"]["failed"] == 0
+        # static entities never carry a route
+        for rec in eng_sta.erd.snapshot().values():
+            assert rec["failed"] is None
+    finally:
+        eng_def.shutdown()
+        eng_sta.shutdown()
+
+
+def test_dispatch_knob_validation():
+    with pytest.raises(ValueError, match="dispatch"):
+        VDMSAsyncEngine(dispatch="bogus")
+
+
+def test_cost_overrides_validation_leaks_no_threads():
+    before = threading.active_count()
+    with pytest.raises(ValueError, match="unknown"):
+        _mk_engine(dispatch="cost",
+                   cost_overrides={"grayscale": {"gpu": 1e-6}})
+    with pytest.raises(ValueError, match="must be a dict"):
+        _mk_engine(dispatch="cost",
+                   cost_overrides={"grayscale": 1e-6})
+    # validation fires BEFORE any pool/loop/batcher thread is spawned:
+    # the failed constructors must not leave orphaned threads behind
+    assert threading.active_count() == before
+
+
+def test_batched_udf_result_count_contract():
+    # a batched UDF returning fewer results than inputs must surface as
+    # per-entity failures, never strand entities (the query would hang)
+    register_udf("dsp_short", lambda img: np.asarray(img))
+    register_batched_udf("dsp_short", lambda imgs: [])   # always short
+    eng = _mk_engine(dispatch="cost", batcher_max_wait_ms=100.0,
+                     cost_overrides={"dsp_short": {"batcher": 1e-9,
+                                                   "native": 10.0,
+                                                   "remote": 10.0}})
+    try:
+        _add_images(eng, n=4)
+        res = eng.execute(_find(ops=[
+            {"type": "udf", "options": {"id": "dsp_short"}}]), timeout=30)
+        assert res["stats"]["failed"] == 4
+        assert eng.dispatch_stats()["batcher"]["errors"] >= 1
+    finally:
+        eng.shutdown()
+
+
+# ------------------------------------------------- forced cost regimes
+def test_cost_dispatch_matches_static_results():
+    eng_sta = _mk_engine()
+    eng_cost = _mk_engine(dispatch="cost", cost_overrides=SPLIT_OVERRIDES)
+    try:
+        _add_images(eng_sta)
+        _add_images(eng_cost)
+        r_sta = eng_sta.execute(_find(), timeout=60)
+        r_cost = eng_cost.execute(_find(), timeout=60)
+        _assert_same_entities(r_sta, r_cost)
+        assert r_cost["stats"]["failed"] == 0
+    finally:
+        eng_sta.shutdown()
+        eng_cost.shutdown()
+
+
+def test_transport_bound_regime_remote_wins():
+    # native forced expensive, remote cheap: the remote-tagged op AND the
+    # native-tagged grayscale both offload
+    eng = _mk_engine(dispatch="cost", cost_overrides={
+        "grayscale": {"remote": 1e-6, "native": 10.0, "batcher": 10.0}})
+    try:
+        _add_images(eng)
+        ops = [{"type": "grayscale"}]
+        res = eng.execute(_find(ops=ops), timeout=60)
+        assert res["stats"]["failed"] == 0
+        stats = eng.dispatch_stats()
+        assert stats["placements"]["remote"] == 6
+        assert stats["placements"]["native"] == 0
+        assert eng.utilization()["remote_dispatched"] >= 6
+    finally:
+        eng.shutdown()
+
+
+def test_compute_bound_regime_native_wins():
+    # a remote-TAGGED op whose round trip dwarfs its compute stays local:
+    # zero remote requests are issued for it
+    slow_wan = TransportModel(network_latency_s=5.0, service_time_s=0.0)
+    eng = _mk_engine(dispatch="cost", transport=slow_wan)
+    try:
+        _add_images(eng)
+        ops = [{"type": "remote", "url": "u", "options": {"id": "grayscale"}}]
+        res = eng.execute(_find(ops=ops), timeout=60)
+        assert res["stats"]["failed"] == 0
+        stats = eng.dispatch_stats()
+        assert stats["placements"]["native"] == 6
+        assert stats["placements"]["remote"] == 0
+        assert eng.utilization()["remote_dispatched"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_model_ops_route_to_batcher_once_calibrated():
+    eng = _mk_engine(dispatch="cost")
+    try:
+        _add_images(eng)
+        # calibrate: the tracker knows this op is expensive natively, so
+        # the batcher's group amortization wins without any override
+        op = make_op("dsp_double", {"factor": 2.0}, where="udf")
+        eng.cost_tracker.observe(op, 0.5)
+        res = eng.execute(_find(ops=[
+            {"type": "udf", "options": {"id": "dsp_double", "factor": 2.0}}]),
+            timeout=60)
+        assert res["stats"]["failed"] == 0
+        stats = eng.dispatch_stats()
+        assert stats["placements"]["batcher"] == 6
+        assert stats["batcher"]["entities_run"] == 6
+        assert stats["batcher"]["groups_run"] >= 1
+    finally:
+        eng.shutdown()
+
+
+# -------------------------------------------------- segment handoffs
+def test_segment_handoff_native_remote_batcher_chain():
+    eng = _mk_engine(dispatch="cost", cost_overrides=SPLIT_OVERRIDES)
+    try:
+        _add_images(eng, n=4)
+        res = eng.execute(_find(), timeout=60)
+        assert res["stats"]["failed"] == 0
+        stats = eng.dispatch_stats()
+        # per chain: native(resize) -> remote(grayscale) ->
+        # batcher(dsp_double) -> native(threshold) = 4 segments, 3 handoffs
+        assert stats["chains_routed"] == 4
+        assert stats["handoffs"] == 12
+        assert stats["segments"] == 16
+        assert stats["placements"] == {"native": 8, "remote": 4, "batcher": 4}
+        # and every backend really executed its segment
+        assert eng.utilization()["remote_dispatched"] == 4
+        assert stats["batcher"]["entities_run"] == 4
+    finally:
+        eng.shutdown()
+
+
+def test_handoff_data_correct_across_backends():
+    eng = _mk_engine(dispatch="cost", cost_overrides=SPLIT_OVERRIDES)
+    try:
+        rng = np.random.default_rng(5)
+        img = rng.uniform(0, 1, (24, 24, 3)).astype(np.float32)
+        eng.add_entity("image", img, {"category": "dsp"})
+        res = eng.execute(_find(), timeout=60)
+        (got,) = list(res["entities"].values())
+        # reference: run the same pipeline inline
+        from repro.core.pipeline import parse_operations, run_op
+        want = img
+        for op in parse_operations(MIXED_PIPE):
+            want = run_op(op, want)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    finally:
+        eng.shutdown()
+
+
+def test_route_respects_cache_prefix_resume():
+    eng = _mk_engine(dispatch="cost", cache_capacity=64,
+                     cost_overrides=SPLIT_OVERRIDES)
+    try:
+        _add_images(eng, n=3)
+        prefix_ops = MIXED_PIPE[:2]
+        eng.execute(_find(ops=prefix_ops), timeout=60)   # populates cache
+        before = eng.dispatch_stats()
+        res = eng.execute(_find(ops=MIXED_PIPE), timeout=60)
+        assert res["stats"]["cache_prefix_hits"] == 3
+        after = eng.dispatch_stats()
+        placed = {b: after["placements"][b] - before["placements"][b]
+                  for b in after["placements"]}
+        # only ops AFTER the resume point were routed: dsp_double
+        # (batcher) + threshold (native) per entity, nothing re-placed on
+        # remote for the cached grayscale prefix
+        assert placed == {"native": 3, "remote": 0, "batcher": 3}
+        assert after["chains_routed"] - before["chains_routed"] == 3
+    finally:
+        eng.shutdown()
+
+
+def test_full_cache_hits_are_not_routed():
+    eng = _mk_engine(dispatch="cost", cache_capacity=64)
+    try:
+        _add_images(eng, n=4)
+        eng.execute(_find(ops=MIXED_PIPE[:1]), timeout=60)
+        before = eng.dispatch_stats()["chains_routed"]
+        res = eng.execute(_find(ops=MIXED_PIPE[:1]), timeout=60)
+        assert res["stats"]["cache_full_hits"] == 4
+        assert eng.dispatch_stats()["chains_routed"] == before
+    finally:
+        eng.shutdown()
+
+
+# ----------------------------------------------------- dispatch="native"
+def test_dispatch_native_forces_everything_onto_native_pool():
+    eng = _mk_engine(dispatch="native")
+    try:
+        _add_images(eng)
+        res = eng.execute(_find(), timeout=60)
+        assert res["stats"]["failed"] == 0
+        stats = eng.dispatch_stats()
+        assert stats["placements"] == {"native": 24}
+        assert stats["handoffs"] == 0
+        assert eng.utilization()["remote_dispatched"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_fusion_composes_with_routing():
+    # fuse_native must keep fusing native runs under dispatch != "static"
+    # (runs stop at the first op routed off the native backend)
+    native_pipe = [{"type": "resize", "width": 16, "height": 16},
+                   {"type": "grayscale"},
+                   {"type": "threshold", "value": 0.5}]
+    from repro.core.pipeline import _fused_chain
+    eng_ref = _mk_engine()
+    eng = _mk_engine(dispatch="native", fuse_native=True)
+    try:
+        _add_images(eng_ref)
+        _add_images(eng)
+        r_ref = eng_ref.execute(_find(ops=native_pipe), timeout=60)
+        info0 = _fused_chain.cache_info()
+        r = eng.execute(_find(ops=native_pipe), timeout=60)
+        assert r["stats"]["failed"] == 0
+        assert list(r["entities"]) == list(r_ref["entities"])
+        for eid in r_ref["entities"]:
+            # same tolerance as the seed's fused-vs-unfused test: XLA
+            # fusion may differ from the per-op path in low float bits
+            np.testing.assert_allclose(np.asarray(r["entities"][eid]),
+                                       np.asarray(r_ref["entities"][eid]),
+                                       atol=1e-6)
+        # the native run really went through the fused-chain path
+        info1 = _fused_chain.cache_info()
+        assert info1.hits + info1.misses > info0.hits + info0.misses
+    finally:
+        eng_ref.shutdown()
+        eng.shutdown()
+
+
+def test_payload_estimate_threads_through_chain():
+    # a post-downscale op is costed on the observed intermediate size,
+    # not the entry payload
+    tracker = OpCostTracker()
+    resize_op = make_op("resize", {"width": 8, "height": 8}, where="native")
+    tracker.observe(resize_op, 1e-4, out_bytes=8 * 8 * 3 * 4)
+    t = TransportModel(network_latency_s=0.0, bandwidth_bytes_s=1e6)
+    pool = RemoteServerPool(1, t)
+    try:
+        rb = RemoteBackend(pool, tracker)
+        router = BackendRouter(
+            [_FixedBackend(NATIVE, 1.0), rb], tracker=tracker, handoff_s=0.0)
+        tail = make_op("grayscale", {}, where="remote")
+        # entry payload is huge (1 MB => ~2 s round trip at 1 MB/s), but
+        # after the resize the intermediate is ~768 B => remote is cheap
+        route = router.route([resize_op, tail], payload_bytes=1_000_000)
+        assert route[1] == REMOTE
+        # without the resize in front, the same entry payload keeps the
+        # tail native (2 s transport vs 1 s native)
+        route2 = router.route([tail], payload_bytes=1_000_000)
+        assert route2[0] == NATIVE
+    finally:
+        pool.shutdown()
+
+
+# --------------------------------------------------------- router units
+class _FixedBackend(Backend):
+    def __init__(self, name, cost, runnable=True):
+        self.name = name
+        self._cost = cost
+        self._runnable = runnable
+        self.placed = []
+
+    def can_run(self, op):
+        return self._runnable
+
+    def estimate(self, op, payload_bytes):
+        return self._cost
+
+    def queue_depth(self):
+        return 0
+
+    def note_placed(self, op):
+        self.placed.append(op.name)
+
+
+def _ops(*names):
+    return [make_op(n, {}, where="native") for n in names]
+
+
+def test_router_handoff_penalty_prevents_thrashing():
+    # remote is marginally cheaper per op, but each switch costs more
+    # than the savings: the whole chain stays on one backend
+    router = BackendRouter([_FixedBackend(NATIVE, 1.00),
+                            _FixedBackend(REMOTE, 0.99)],
+                           handoff_s=0.1)
+    route = router.route(_ops("a", "b", "c", "d"))
+    assert route == [NATIVE] * 4
+    assert router.stats()["handoffs"] == 0
+
+
+def test_router_switches_when_savings_exceed_penalty():
+    router = BackendRouter([_FixedBackend(NATIVE, 1.0),
+                            _FixedBackend(REMOTE, 0.1)],
+                           handoff_s=0.01)
+    route = router.route(_ops("a", "b", "c"))
+    assert route == [REMOTE] * 3
+    # handoffs count switches WITHIN the chain (the entry hop onto the
+    # first backend is a cost term, not a segment boundary)
+    assert router.stats()["handoffs"] == 0
+    assert router.stats()["segments"] == 1
+
+
+def test_router_start_offset_routes_only_the_tail():
+    router = BackendRouter([_FixedBackend(NATIVE, 1.0),
+                            _FixedBackend(REMOTE, 0.1)], handoff_s=0.0)
+    route = router.route(_ops("a", "b", "c"), start=2)
+    assert len(route) == 3
+    assert route[2] == REMOTE
+    assert router.stats()["placements"][REMOTE] == 1
+    assert router.route(_ops("a"), start=1) is None   # nothing to place
+    assert sum(router.stats()["placements"].values()) == 1
+
+
+def test_router_overrides_never_bypass_can_run():
+    batcher = _FixedBackend(BATCHER, 1e-9, runnable=False)
+    router = BackendRouter([_FixedBackend(NATIVE, 1.0), batcher],
+                           overrides={"a": {BATCHER: 1e-12}},
+                           handoff_s=0.0)
+    assert router.route(_ops("a")) == [NATIVE]
+    assert batcher.placed == []
+
+
+def test_static_router_counts_placements():
+    r = StaticRouter(NATIVE)
+    assert r.route(_ops("a", "b")) == [NATIVE, NATIVE]
+    assert r.stats()["placements"] == {NATIVE: 2}
+    assert r.stats()["handoffs"] == 0
+
+
+# ------------------------------------------------------ cost-model units
+def test_op_cost_tracker_ewma_and_kinds():
+    t = OpCostTracker(default_s=0.5, alpha=0.5)
+    op = make_op("x", {}, where="native")
+    assert t.estimate(op) == 0.5                 # default until observed
+    assert not t.known(op)
+    t.observe(op, 1.0)
+    assert t.estimate(op) == 1.0
+    t.observe(op, 0.0)
+    assert t.estimate(op) == pytest.approx(0.5)  # EWMA moved halfway
+    assert not t.known(op, kind="batched")       # kinds are independent
+    t.observe(op, 0.125, kind="batched")
+    assert t.estimate(op, kind="batched") == 0.125
+    assert t.estimate(op) == pytest.approx(0.5)
+
+
+def test_native_backend_estimate_grows_with_projected_load():
+    class _Loop:
+        num_native_workers = 2
+
+        class t2_meter:
+            @staticmethod
+            def busy_seconds(since=0.0):
+                return 0.0
+
+        class queue1:
+            @staticmethod
+            def qsize():
+                return 0
+
+    tracker = OpCostTracker(default_s=0.1)
+    nb = NativeBackend(_Loop(), tracker)
+    op = make_op("x", {}, where="native")
+    base = nb.estimate(op, 0)
+    for _ in range(8):
+        nb.note_placed(op)
+    assert nb.estimate(op, 0) > base    # backlog ledger pushes it up
+    assert nb.can_run(op)
+
+
+def test_remote_backend_transport_term_and_dead_pool():
+    t = TransportModel(network_latency_s=0.05, bandwidth_bytes_s=1e6)
+    pool = RemoteServerPool(1, t)
+    try:
+        tracker = OpCostTracker(default_s=0.0)
+        rb = RemoteBackend(pool, tracker)
+        op = make_op("x", {}, where="remote")
+        small = rb.estimate(op, 0)
+        big = rb.estimate(op, 1_000_000)
+        assert small >= t.network_latency_s
+        assert big > small + 1.0        # 2 MB over 1 MB/s round trip
+        pool.kill_server(0)
+        assert not rb.can_run(op)
+        assert rb.estimate(op, 0) == float("inf")
+    finally:
+        pool.shutdown()
+
+
+# ------------------------------------------------ batcher-backend engine
+def test_batcher_groups_respect_group_size():
+    eng = _mk_engine(dispatch="cost", batcher_group_size=4,
+                     batcher_max_wait_ms=200.0,
+                     cost_overrides={
+                         "dsp_double": {"batcher": 1e-9, "native": 10.0,
+                                        "remote": 10.0}})
+    try:
+        _add_images(eng, n=8)
+        res = eng.execute(_find(ops=[
+            {"type": "udf", "options": {"id": "dsp_double", "factor": 2.0}}]),
+            timeout=60)
+        assert res["stats"]["failed"] == 0
+        b = eng.dispatch_stats()["batcher"]
+        assert b["entities_run"] == 8
+        assert b["groups_run"] >= 2       # 8 entities, groups capped at 4
+        assert b["pending"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_cancel_with_batcher_routed_work_leaks_nothing():
+    eng = _mk_engine(dispatch="cost", batcher_max_wait_ms=100.0,
+                     cost_overrides=SPLIT_OVERRIDES,
+                     transport=TransportModel(network_latency_s=0.001,
+                                              service_time_s=0.05))
+    try:
+        _add_images(eng, n=10)
+        fut = eng.submit(_find())
+        time.sleep(0.02)          # let some entities reach the backends
+        assert fut.cancel()
+        deadline = time.monotonic() + 10
+        while (eng.pool.inflight or eng.loop.queue1.qsize()
+               or eng.batcher_backend.pending()) \
+                and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert not eng.pool.inflight
+        assert eng.loop.queue1.qsize() == 0
+        assert eng.batcher_backend.pending() == 0
+        assert eng.active_sessions() == 0
+        # engine still healthy on all three backends
+        res = eng.execute(_find(), timeout=60)
+        assert res["stats"]["matched"] == 10
+        assert res["stats"]["failed"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_cost_dispatch_composes_with_coalescing():
+    eng = _mk_engine(dispatch="cost", coalesce_window_ms=60_000,
+                     cost_overrides=SPLIT_OVERRIDES)
+    eng_sta = _mk_engine()
+    try:
+        _add_images(eng, n=6)
+        _add_images(eng_sta, n=6)
+        fut = eng.submit(_find())
+        deadline = time.monotonic() + 30
+        while eng.pending_coalesced() < 6 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert eng.pending_coalesced() == 6   # all remote segments buffered
+        eng.flush_coalesced()
+        res = fut.result(timeout=60)
+        assert res["stats"]["failed"] == 0
+        assert eng.utilization()["coalesced_entities"] == 6
+        _assert_same_entities(eng_sta.execute(_find(), timeout=60), res)
+    finally:
+        eng.shutdown()
+        eng_sta.shutdown()

@@ -89,6 +89,97 @@ def test_engine_processes_every_entity_exactly_once(n_entities, n_servers, opnam
         eng.shutdown()
 
 
+# --------------------------------------- multi-backend dispatch splits
+from repro.core.udf import register_batched_udf, register_udf  # noqa: E402
+
+register_udf("prop_scale", lambda img, k=2.0: np.asarray(img) * k)
+register_batched_udf(
+    "prop_scale", lambda imgs, k=2.0: [np.asarray(i) * k for i in imgs])
+register_udf("prop_dim", lambda img: np.asarray(img) * 0.5)
+
+# NOTE: every entry must resolve to a DISTINCT op name (the override
+# key), or two drawn ops would collide on one override and the forced
+# split would silently differ from the drawn one
+_PROP_OPS = {
+    "grayscale": {"type": "grayscale"},
+    "threshold": {"type": "threshold", "value": 0.5},
+    "flip": {"type": "flip"},
+    "rotate": {"type": "rotate", "k": 1},
+    "prop_scale": {"type": "udf", "options": {"id": "prop_scale", "k": 2.0}},
+    "prop_dim": {"type": "remote", "url": "u",
+                 "options": {"id": "prop_dim"}},
+}
+_BACKENDS = ["native", "remote", "batcher"]
+
+
+@st.composite
+def _chain_and_split(draw):
+    names = draw(st.lists(st.sampled_from(sorted(_PROP_OPS)),
+                          unique=True, min_size=1, max_size=5))
+    split = [draw(st.sampled_from(_BACKENDS)) for _ in names]
+    return names, split
+
+
+@SET
+@given(_chain_and_split(), st.booleans())
+def test_router_split_equals_single_backend_execution(chain_split, use_cache):
+    """For ANY op chain and ANY forced router split, concatenated
+    per-segment execution across native/remote/batcher equals the static
+    single-path execution — including across result-cache prefix-resume
+    points (the cached second run must also match)."""
+    names, split = chain_split
+    ops = [_PROP_OPS[n] for n in names]
+    # force the drawn split: the chosen backend is made free, the others
+    # prohibitive (can_run still gates, so an impossible choice — e.g.
+    # batcher for a non-batchable op — falls back to a runnable backend,
+    # keeping every drawn split executable)
+    overrides = {}
+    for op_entry, backend in zip(ops, split):
+        name = (op_entry.get("options", {}).get("id")
+                or op_entry["type"])
+        per = {b: 100.0 for b in _BACKENDS}
+        per[backend] = 1e-9
+        overrides[name] = per
+    transport = TransportModel(network_latency_s=0.0005,
+                               service_time_s=0.001)
+    eng_static = VDMSAsyncEngine(num_remote_servers=2, transport=transport)
+    eng_cost = VDMSAsyncEngine(
+        num_remote_servers=2, transport=transport, dispatch="cost",
+        cost_overrides=overrides,
+        cache_capacity=64 if use_cache else 0)
+    try:
+        rng = np.random.default_rng(len(names))
+        for i in range(3):
+            img = rng.uniform(0, 1, (8, 8, 3)).astype(np.float32)
+            eng_static.add_entity("image", img, {"category": "p", "idx": i})
+            eng_cost.add_entity("image", img, {"category": "p", "idx": i})
+        q = [{"FindImage": {"constraints": {"category": ["==", "p"]},
+                            "operations": ops}}]
+        want = eng_static.execute(q, timeout=60)
+        if use_cache and len(ops) > 1:
+            # seed the cache with a strict prefix of the chain FIRST, so
+            # the full-chain run below prefix-resumes mid-chain and the
+            # router only places the remaining segment
+            qp = [{"FindImage": {"constraints": {"category": ["==", "p"]},
+                                 "operations": ops[:-1]}}]
+            eng_cost.execute(qp, timeout=60)
+        got = eng_cost.execute(q, timeout=60)
+        runs = [got]
+        if use_cache:
+            # and the fully-cached re-run must also match
+            runs.append(eng_cost.execute(q, timeout=60))
+        for res in runs:
+            assert res["stats"]["failed"] == 0
+            assert list(res["entities"]) == list(want["entities"])
+            for eid in want["entities"]:
+                np.testing.assert_array_equal(
+                    np.asarray(res["entities"][eid]),
+                    np.asarray(want["entities"][eid]))
+    finally:
+        eng_static.shutdown()
+        eng_cost.shutdown()
+
+
 # ------------------------------------------------------- checkpointing
 tree_st = st.recursive(
     st.tuples(st.integers(1, 4), st.integers(1, 4)),

@@ -221,6 +221,98 @@ def test_timeout_cancels_and_leaks_nothing():
         eng.shutdown()
 
 
+# ------------------------------------------------------------- chaos
+def test_chaos_cancel_timeout_storm_mixed_backends():
+    """Randomized cancel/timeout storm against a mixed
+    native+remote+batcher workload: every surviving session completes
+    cleanly, and nothing leaks — pool.inflight drains, Queue_1 lanes
+    empty, the batcher inbox empties, no session objects remain."""
+    import random
+
+    from repro.core.udf import register_batched_udf, register_udf
+
+    register_udf("chaos_scale", lambda img, k=3.0: np.asarray(img) * k)
+    register_batched_udf(
+        "chaos_scale", lambda imgs, k=3.0: [np.asarray(i) * k for i in imgs])
+
+    mixed_pipe = [
+        {"type": "resize", "width": 16, "height": 16},
+        {"type": "remote", "url": "u", "options": {"id": "grayscale"}},
+        {"type": "udf", "options": {"id": "chaos_scale", "k": 3.0}},
+        {"type": "threshold", "value": 0.4},
+    ]
+    eng = _mk_engine(
+        dispatch="cost", num_native_workers=2,
+        transport=TransportModel(network_latency_s=0.001,
+                                 service_time_s=0.01),
+        cost_overrides={
+            "grayscale": {"remote": 1e-6, "native": 10.0, "batcher": 10.0},
+            "chaos_scale": {"batcher": 1e-6, "native": 10.0, "remote": 10.0},
+        })
+    try:
+        _add_images(eng, 6)
+        eng.execute(_find(ops=mixed_pipe), timeout=60)   # jit warmup
+        rng = random.Random(0xC0FFEE)
+        outcomes = []
+        lock = threading.Lock()
+
+        def client(cid):
+            fut = eng.submit(_find(ops=mixed_pipe))
+            action = rng.random()   # seeded; races only affect WHICH
+            if action < 0.4:        # branch wins, not the invariants
+                time.sleep(rng.random() * 0.03)
+                cancelled = fut.cancel()
+                with lock:
+                    outcomes.append(("cancel", fut, cancelled))
+                return
+            if action < 0.6:
+                try:
+                    res = fut.result(timeout=rng.random() * 0.02)
+                    with lock:
+                        outcomes.append(("done", fut, res))
+                except TimeoutError:
+                    fut.cancel()
+                    with lock:
+                        outcomes.append(("timeout", fut, None))
+                return
+            res = fut.result(timeout=120)
+            with lock:
+                outcomes.append(("done", fut, res))
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(24)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(outcomes) == 24
+        survivors = [o for o in outcomes if o[0] == "done"]
+        for _, fut, res in survivors:
+            assert res["stats"]["matched"] == 6
+            assert res["stats"]["failed"] == 0
+            assert len(res["entities"]) == 6
+        # a cancel() that returned True must report cancelled
+        for kind, fut, flag in outcomes:
+            if kind == "cancel" and flag and not fut.done():
+                pytest.fail("cancelled future not done")
+        # nothing leaks anywhere
+        deadline = time.monotonic() + 15
+        while (eng.pool.inflight or eng.loop.queue1.qsize()
+               or eng.batcher_backend.pending()
+               or eng.active_sessions()) and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert not eng.pool.inflight, "cancelled work left inflight requests"
+        assert eng.loop.queue1.qsize() == 0, "Queue_1 lane leaked"
+        assert eng.batcher_backend.pending() == 0, "batcher inbox leaked"
+        assert eng.active_sessions() == 0, "session objects leaked"
+        # engine still healthy across all three backends
+        res = eng.execute(_find(ops=mixed_pipe), timeout=60)
+        assert res["stats"]["matched"] == 6
+        assert res["stats"]["failed"] == 0
+    finally:
+        eng.shutdown()
+
+
 # ------------------------------------------------------- native pool knob
 def test_worker_pool_matches_single_worker_results():
     eng1 = _mk_engine(num_native_workers=1)
