@@ -18,7 +18,7 @@ from repro.dataio import synthetic_faces
 
 def main():
     # engine with 4 simulated remote servers (each a worker thread with a
-    # calibrated network/compute cost model — see DESIGN.md section 5)
+    # calibrated network/compute cost model — see ARCHITECTURE.md)
     engine = VDMSAsyncEngine(
         num_remote_servers=4,
         transport=TransportModel(network_latency_s=0.002, service_time_s=0.005),

@@ -43,6 +43,59 @@ def _default_native_workers() -> int:
 
 
 class VDMSAsyncEngine:
+    """The VDMS-Async query engine: paper-faithful by default, with
+    every beyond-paper subsystem behind an explicitly-OFF knob.
+
+    Constructor knobs (grouped; defaults reproduce the paper engine
+    except for the scheduling pair, which benchmarks pin explicitly):
+
+    **Remote pool** —
+      ``num_remote_servers``: κ simulated remote servers (paper's UDF /
+      remote executors), each a worker thread with a calibrated
+      transport model.  ``transport``: a
+      :class:`~repro.core.remote.TransportModel` (network latency,
+      bandwidth, per-entity service time).  ``dispatch_policy``:
+      ``"round_robin"`` | ``"least_loaded"`` server picker (NOT the
+      multi-backend ``dispatch`` knob below).  ``batch_remote``:
+      coalesce up to N same-op entities per remote request.
+
+    **Scheduling** (not paper-faithful by default; the exact paper
+    baseline is ``num_native_workers=1, fair_scheduling=False``) —
+      ``num_native_workers``: native executor pool size (the paper's
+      single Thread_2 generalized; default cpu-bounded).
+      ``fair_scheduling``: per-query Queue_1 lanes with round-robin
+      service instead of one global FIFO.
+      ``fuse_native``: jit-fuse maximal native-op runs.
+
+    **Result cache** (off by default) —
+      ``cache_capacity`` / ``cache_capacity_bytes``: bounded LRU keyed
+      on (eid, pipeline signature); 0 disables.
+
+    **Cross-session coalescing** (off by default) —
+      ``coalesce_window_ms`` / ``coalesce_max_batch``: Thread_3 groups
+      pending remote work by op signature ACROSS sessions into one
+      batched request per window.
+
+    **Multi-backend dispatch** (static by default) —
+      ``dispatch``: ``"static"`` (paper rule, byte-identical) |
+      ``"cost"`` (cost-model router) | ``"native"`` (all-native
+      baseline).  ``cost_overrides``: ``{op_name: {backend: seconds}}``
+      pinned estimates for forced regimes.  ``batcher_group_size`` /
+      ``batcher_max_wait_ms``: grouped-UDF backend micro-batching.
+      ``device_backend``: build the device-executor backend
+      (requires ``dispatch="cost"``): ``True``/``"auto"`` targets jax's
+      default device, a platform string (``"cpu"``, ``"gpu"``,
+      ``"tpu"``) pins one.  ``device_batch_size`` /
+      ``device_max_wait_ms``: device micro-batching window.
+
+    Public surface: :meth:`submit` / :meth:`execute` for queries,
+    :meth:`add_entity` for ingest, :meth:`scale_remote` for elasticity,
+    and the introspection trio :meth:`utilization` /
+    :meth:`cache_stats` / :meth:`dispatch_stats`, plus the
+    deterministic coalescing controls :meth:`flush_coalesced` /
+    :meth:`pending_coalesced`.  Always call :meth:`shutdown` (all loop,
+    pool, and backend threads are joined)."""
+
     def __init__(self, *, num_remote_servers: int = 1,
                  transport: TransportModel | None = None,
                  fuse_native: bool = False,
@@ -57,12 +110,30 @@ class VDMSAsyncEngine:
                  dispatch: str = "static",
                  cost_overrides: dict | None = None,
                  batcher_group_size: int = 8,
-                 batcher_max_wait_ms: float = 2.0):
+                 batcher_max_wait_ms: float = 2.0,
+                 device_backend: bool | str = False,
+                 device_batch_size: int = 8,
+                 device_max_wait_ms: float = 2.0):
         if dispatch not in ("static", "cost", "native"):
             raise ValueError(
                 f"dispatch must be 'static' (paper-faithful placement), "
                 f"'cost' (cost-model router) or 'native' (all-native "
                 f"baseline), got {dispatch!r}")
+        if device_backend and dispatch != "cost":
+            # a device backend no router can place work on would be
+            # silently inert — same failure mode as a stray override
+            raise ValueError(
+                "device_backend requires dispatch='cost' (only the "
+                "cost-model router can place segments on the device)")
+        device_handle = None
+        if device_backend and isinstance(device_backend, str) \
+                and device_backend != "auto":
+            # resolve an explicit platform string ("cpu"/"gpu"/"tpu")
+            # HERE, before any pool/loop thread exists: jax raises on a
+            # platform this host does not have, and that failure must
+            # not leak running threads
+            import jax
+            device_handle = jax.devices(device_backend)[0]
         if dispatch == "static":
             if cost_overrides:
                 # a forced regime with no router would be silently inert
@@ -71,11 +142,19 @@ class VDMSAsyncEngine:
                     "cost_overrides requires dispatch='cost' or 'native' "
                     "(dispatch='static' never consults a cost model)")
         else:
-            # shape-check the knob BEFORE any pool/loop/batcher thread
-            # exists: a malformed override must not leak running threads
-            # (validated under "native" too, where it is merely unused,
-            # so a typo'd regime never passes silently)
-            validate_overrides(cost_overrides)
+            # shape-check the knob BEFORE any pool/loop/batcher/device
+            # thread exists: a malformed override must not leak running
+            # threads (validated under "native" too, where it is merely
+            # unused, so a typo'd regime never passes silently).
+            # "device" is only a valid override target when the device
+            # backend is actually enabled: a pinned device regime on an
+            # engine with no device backend would either be silently
+            # inert (dispatch="native") or fail inside BackendRouter
+            # after threads exist (dispatch="cost") — both fail here
+            # instead.
+            known = ("native", "remote", "batcher") \
+                + (("device",) if device_backend else ())
+            validate_overrides(cost_overrides, known=known)
         self.meta = MetadataStore()
         self.store = BlobStore()
         self.erd = ERD()
@@ -104,6 +183,7 @@ class VDMSAsyncEngine:
         self.cost_tracker = None
         self.router = None
         self.batcher_backend = None
+        self.device_backend = None
         if dispatch != "static":
             self.cost_tracker = OpCostTracker()
             if dispatch == "cost":
@@ -114,6 +194,17 @@ class VDMSAsyncEngine:
                     group_size=batcher_group_size,
                     max_wait_s=batcher_max_wait_ms / 1000.0,
                     tracker=self.cost_tracker)
+                if device_backend:
+                    # deferred for the same reason: the device executor
+                    # pulls in jax device plumbing a CPU-only engine
+                    # never needs.  device_backend=True/"auto" targets
+                    # jax's default device; a platform string ("cpu",
+                    # "gpu", "tpu") pins one (resolved above, pre-thread)
+                    from repro.query.device_backend import DeviceBackend
+                    self.device_backend = DeviceBackend(
+                        batch_size=device_batch_size,
+                        max_wait_s=device_max_wait_ms / 1000.0,
+                        tracker=self.cost_tracker, device=device_handle)
         self.loop = EventLoop(self.pool, self.erd,
                               fuse_native=fuse_native,
                               batch_remote=batch_remote,
@@ -125,15 +216,21 @@ class VDMSAsyncEngine:
                               coalesce_max_batch=coalesce_max_batch,
                               result_cache=self.result_cache,
                               batcher_backend=self.batcher_backend,
+                              device_backend=self.device_backend,
                               cost_tracker=self.cost_tracker)
         if dispatch == "native":
             self.router = StaticRouter("native")
         elif dispatch == "cost":
             self.batcher_backend.bind(self.loop.queue2, self._is_cancelled)
+            backends = [NativeBackend(self.loop, self.cost_tracker),
+                        RemoteBackend(self.pool, self.cost_tracker),
+                        self.batcher_backend]
+            if self.device_backend is not None:
+                self.device_backend.bind(self.loop.queue2,
+                                         self._is_cancelled)
+                backends.append(self.device_backend)
             self.router = BackendRouter(
-                [NativeBackend(self.loop, self.cost_tracker),
-                 RemoteBackend(self.pool, self.cost_tracker),
-                 self.batcher_backend],
+                backends,
                 overrides=cost_overrides,
                 tracker=self.cost_tracker)
         self.planner = QueryPlanner(self.meta, self.store,
@@ -150,8 +247,21 @@ class VDMSAsyncEngine:
                on_entity: Optional[Callable[[Entity], None]] = None,
                cache: bool = True) -> QueryFuture:
         """Submit a VDMS JSON query; returns immediately with a
-        :class:`QueryFuture`.  ``on_entity(entity)`` streams each entity
-        as it completes its pipeline (called from event-loop threads).
+        :class:`QueryFuture`.
+
+        ``query`` is a list of command dicts (``FindImage`` /
+        ``FindVideo`` / ``AddImage`` / ``AddVideo`` — see
+        ``repro.query.language``).  Submission cost is O(fan-out)
+        pointer work only: the query is parsed, compiled to a phased
+        plan, and its first phase launched onto the event loop without
+        waiting for any operation to execute.
+
+        The returned future supports ``result(timeout)``, ``done()``,
+        ``cancel()``, ``exception()``, and ``add_done_callback(fn)``.
+        ``on_entity(entity)`` additionally streams each entity as it
+        completes its pipeline — called from event-loop threads, so the
+        callback must be quick and thread-safe.
+
         ``cache=False`` makes this query bypass the result cache (no
         reads, no writes); it is a no-op when the engine was built
         without a cache (``cache_capacity=0``, the default)."""
@@ -253,30 +363,47 @@ class VDMSAsyncEngine:
         }
 
     def cache_stats(self) -> dict:
-        """Result-cache counters (empty dict when the cache is off)."""
+        """Engine-lifetime result-cache counters (empty dict when the
+        cache is off): ``size`` / ``bytes`` and their capacities,
+        ``hits`` / ``prefix_hits`` / ``misses`` / ``hit_rate``, and the
+        write-side ledger (``puts``, ``stale_puts``, ``oversize_puts``,
+        ``evictions``, ``invalidations``).  Per-query hit counts ride
+        on each response's ``stats`` instead (``cache_full_hits`` /
+        ``cache_prefix_hits``)."""
         return (self.result_cache.stats()
                 if self.result_cache is not None else {})
 
     def dispatch_stats(self) -> dict:
-        """Multi-backend router counters: per-backend placements,
-        handoffs, segments, plus batcher-backend group accounting.
-        ``{"mode": "static"}`` alone when the router is off (not to be
-        confused with ``dispatch_policy``, the remote pool's
+        """Multi-backend router counters: ``placements`` (ops placed
+        per backend), ``handoffs`` / ``segments`` / ``chains_routed``,
+        live ``queue_depths``, plus per-backend accounting blocks —
+        ``batcher`` (groups/entities run, errors, cancelled drops) and
+        ``device`` (groups/entities run, jit ``compiles``, calibration
+        state, ``h2d_bytes``/``d2h_bytes`` moved) when those backends
+        exist.  ``{"mode": "static"}`` alone when the router is off
+        (not to be confused with ``dispatch_policy``, the remote pool's
         round-robin/least-loaded server picker)."""
         out: dict = {"mode": self.dispatch}
         if self.router is not None:
             out.update(self.router.stats())
         if self.batcher_backend is not None:
             out["batcher"] = self.batcher_backend.stats()
+        if self.device_backend is not None:
+            out["device"] = self.device_backend.stats()
         return out
 
     def pending_coalesced(self) -> int:
-        """Entities buffered in open coalescing groups right now."""
+        """Entities buffered in open coalescing groups right now — the
+        deterministic signal to poll instead of sleeping out the
+        wall-clock window (always 0 when coalescing is off)."""
         return self.loop.pending_coalesced()
 
     def flush_coalesced(self):
-        """Force-dispatch all open coalescing groups (deterministic
-        alternative to waiting out ``coalesce_window_ms``)."""
+        """Force-dispatch all open coalescing groups now, regardless of
+        their window deadlines — the deterministic alternative to
+        waiting out ``coalesce_window_ms`` (tests, graceful drains).
+        Asynchronous: the flush is processed by Thread_3; a no-op when
+        coalescing is off."""
         self.loop.flush_coalesced()
 
     def shutdown(self):
@@ -286,5 +413,7 @@ class VDMSAsyncEngine:
             s.cancel()
         if self.batcher_backend is not None:
             self.batcher_backend.shutdown()
+        if self.device_backend is not None:
+            self.device_backend.shutdown()
         self.loop.shutdown()
         self.pool.shutdown()

@@ -47,16 +47,21 @@ Beyond-paper knobs, default OFF:
   workers record each cacheable entity's final result, plus an
   intermediate snapshot after every remote/UDF op — the expensive resume
   points for prefix hits.
-- multi-backend dispatch (``batcher_backend`` + ``cost_tracker``, wired
-  by the engine when ``dispatch != "static"``): entities may carry a
-  ``route`` — a backend name per op.  Native workers execute only ops
-  routed ``native`` (including UDF/remote-tagged ops the router placed
-  locally, which get a cache snapshot like any expensive resume point)
-  and hand everything else to Thread_3; Thread_3 sends ``remote``-routed
-  ops down the existing dispatch/coalescing path and ``batcher``-routed
-  ops to the :class:`~repro.serving.batcher.UDFBatcherBackend`, whose
-  group replies come back as ``("batched", entity, result, err)``
-  messages on Queue_2 — the same reply path remote responses ride.
+- multi-backend dispatch (``batcher_backend`` + ``device_backend`` +
+  ``cost_tracker``, wired by the engine when ``dispatch != "static"``):
+  entities may carry a ``route`` — a backend name per op.  Native
+  workers execute only ops routed ``native`` (including UDF/remote-
+  tagged ops the router placed locally, which get a cache snapshot like
+  any expensive resume point) and hand everything else to Thread_3;
+  Thread_3 sends ``remote``-routed ops down the existing
+  dispatch/coalescing path, ``batcher``-routed ops to the
+  :class:`~repro.serving.batcher.UDFBatcherBackend`, and
+  ``device``-routed ops to the
+  :class:`~repro.query.device_backend.DeviceBackend`.  Both offload
+  backends reply with ``("batched" | "device", entity, result, err)``
+  messages on Queue_2 — the same reply path remote responses ride, so
+  cache snapshots after device/batcher segments, cancellation, and
+  re-enqueue are uniform across all non-native backends.
   ``route=None`` (every static-dispatch entity) reproduces the paper's
   placement rule exactly.  The ``cost_tracker`` is calibrated online:
   native workers record per-op execution seconds.
@@ -249,6 +254,7 @@ class EventLoop:
                  coalesce_max_batch: int = 64,
                  result_cache=None,
                  batcher_backend=None,
+                 device_backend=None,
                  cost_tracker=None,
                  clock=time.monotonic):
         self.pool = pool
@@ -259,6 +265,7 @@ class EventLoop:
         self.coalesce_max_batch = max(2, coalesce_max_batch)
         self.result_cache = result_cache
         self.batcher_backend = batcher_backend
+        self.device_backend = device_backend
         self.cost_tracker = cost_tracker
         self._clock = clock
         # open coalescing groups (mutated only by Thread_3); the buffered
@@ -443,9 +450,13 @@ class EventLoop:
                 kind = msg[0]
                 if kind == "dispatch":
                     ent = msg[1]
-                    if self._backend_for(ent) == "batcher" \
+                    backend = self._backend_for(ent)
+                    if backend == "batcher" \
                             and self.batcher_backend is not None:
                         self.batcher_backend.submit(ent)
+                    elif backend == "device" \
+                            and self.device_backend is not None:
+                        self.device_backend.submit(ent)
                     elif coalesce:
                         op = ent.current_op()
                         group = self._groups.get(op)
@@ -462,11 +473,13 @@ class EventLoop:
                         if len(pending) >= self.batch_remote:
                             self._flush(pending)
                             pending = []
-                elif kind == "batched":
-                    # batcher-backend group reply: same handoff semantics
-                    # as a remote response
+                elif kind in ("batched", "device"):
+                    # offload-backend group reply (batcher or device):
+                    # same handoff semantics as a remote response
                     _, ent, result, err = msg
-                    self._handle_batched(ent, result, err)
+                    self._handle_offload(
+                        ent, result, err,
+                        "batcher" if kind == "batched" else "device")
                 elif kind == "flush_coalesce":
                     self._flush_groups(list(self._groups))
                 else:
@@ -542,16 +555,19 @@ class EventLoop:
         else:
             self.enqueue(ent)      # Q1-Enqueue from Thread_3
 
-    def _handle_batched(self, ent: Entity, result, err):
-        """Reply tail for a batcher-backend group member."""
+    def _handle_offload(self, ent: Entity, result, err, source: str):
+        """Reply tail for an offload-backend group member (``source`` is
+        ``"batcher"`` or ``"device"``; ERD stages and failure messages
+        name the backend that actually ran the op)."""
         if self.is_cancelled(ent.query_id):
             return                 # cancelled while in the group: drop
         if err is not None:
+            word = "batched" if source == "batcher" else source
             self._fail_segment(
-                ent, f"batched op {ent.current_op().name} failed: {err}",
-                "batcher-error")
+                ent, f"{word} op {ent.current_op().name} failed: {err}",
+                f"{source}-error")
             return
-        self._complete_segment(ent, result, "batcher")
+        self._complete_segment(ent, result, source)
 
     def _handle_response(self, tag: str, req: Request, payload):
         status, result = self.pool.handle_response(tag, req, payload)

@@ -1,6 +1,6 @@
 """Operation pipeline representation + native-chain fusion.
 
-Beyond-paper optimization (EXPERIMENTS.md section Perf, host side): VDMS-Async
+Beyond-paper optimization (ARCHITECTURE.md, ``fuse_native``): VDMS-Async
 executes pipeline operations one at a time; here, maximal runs of native
 ops are jit-fused into a single compiled callable, cached per
 (chain-signature, input-shape).  One dispatch replaces N, and XLA fuses

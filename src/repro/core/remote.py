@@ -3,7 +3,7 @@ kappa remote servers with plug-and-play endpoints.
 
 Each ``RemoteServer`` is a worker thread with its own request queue —
 the stand-in for a Flask endpoint on another machine.  The transport and
-capacity model is explicit and calibrated (DESIGN.md section 5): a request
+capacity model is explicit and calibrated (ARCHITECTURE.md): a request
 costs ``network_latency + payload_bytes/bandwidth + op_service_time``,
 realized with real op execution plus a GIL-releasing sleep for the
 network/remote-compute component, so overlap measured by the benchmarks
@@ -46,7 +46,7 @@ class TransportModel:
 
     def cost_batch(self, payloads: list[int]) -> float:
         """One request carrying N entities: latency paid once (this is the
-        win batched dispatch buys — see EXPERIMENTS.md section Perf)."""
+        win batched dispatch buys — see ARCHITECTURE.md "coalescing")."""
         return self.network_latency_s + 2 * sum(payloads) / self.bandwidth_bytes_s \
             + self.service_time_s * len(payloads)
 

@@ -18,6 +18,7 @@ from typing import Any, Callable
 
 _REGISTRY: dict[str, Callable] = {}
 _BATCHED: dict[str, Callable] = {}
+_DEVICE: dict[str, Callable] = {}
 _LOCK = threading.Lock()
 
 
@@ -46,6 +47,32 @@ def get_batched_udf(name: str) -> Callable:
 def has_batched_udf(name: str) -> bool:
     with _LOCK:
         return name in _BATCHED
+
+
+def register_device_udf(name: str, fn: Callable) -> None:
+    """Device-execution variant of a UDF: ``fn(list_of_images, **options)
+    -> list_of_images``, where ``fn`` runs its math as jit-compiled JAX
+    on the accelerator (the function owns its own jit/device placement —
+    typically one compiled call over the whole micro-batch).  Registering
+    one makes the op eligible for the device backend
+    (:class:`repro.query.device_backend.DeviceBackend`), which the cost
+    router can then pick when device compute + transfer beats the other
+    backends.  MUST be result-equivalent to the per-entity UDF of the
+    same name — the router treats backends as interchangeable.  Native
+    table ops (crop/resize/...) need no registration: the device backend
+    vmaps them automatically."""
+    with _LOCK:
+        _DEVICE[name] = fn
+
+
+def get_device_udf(name: str) -> Callable:
+    with _LOCK:
+        return _DEVICE[name]
+
+
+def has_device_udf(name: str) -> bool:
+    with _LOCK:
+        return name in _DEVICE
 
 
 def get_udf(name: str) -> Callable:
@@ -130,3 +157,40 @@ def register_model_udf(name: str, arch: str = "qwen3-0.6b", *,
                               4, 4) for img, r in zip(imgs, reqs)]
 
         register_batched_udf(name, batched)
+
+        # Device-backend path: the same model as ONE jit-compiled
+        # prefill + decode over the whole micro-batch, built on the
+        # serving layer's serve_step fns (repro.serving.serve_step).
+        # Greedy decoding again keeps the device result token-for-token
+        # identical to the per-entity UDF, and the compiled fns are
+        # shared across calls so the device cost model's one-time
+        # compile term amortizes away with use.
+        from repro.serving.serve_step import make_serve_fns, sample_token
+
+        prefill_fn, serve_step = make_serve_fns(model, sh)
+        prefill_jit = jax.jit(prefill_fn, static_argnums=(2,))
+        step_jit = jax.jit(serve_step)
+
+        def device_batched(imgs, **_):
+            with lock:
+                toks = jnp.stack([feats_of(img) for img in imgs])
+                batch = {"tokens": toks}
+                if cfg.is_encoder_decoder:
+                    batch["frames"] = jnp.zeros(
+                        (len(imgs), cfg.encoder_seq_len, cfg.d_model),
+                        jnp.float32)
+                prompt_len = toks.shape[1]
+                logits, cache = prefill_jit(params, batch,
+                                            prompt_len + steps + 1)
+                key = jax.random.PRNGKey(0)   # unused: greedy
+                tok = sample_token(logits, key, 0.0, cfg.vocab_size)
+                idx = jnp.asarray(prompt_len, jnp.int32)
+                for i in range(steps - 1):
+                    logits, cache = step_jit(params, tok, cache, idx + i)
+                    tok = sample_token(logits, jax.random.fold_in(key, i),
+                                       0.0, cfg.vocab_size)
+                last = np.asarray(jax.device_get(tok))[:, 0]
+            return [draw_text(img, labels[int(t) % len(labels)], 4, 4)
+                    for img, t in zip(imgs, last)]
+
+        register_device_udf(name, device_batched)

@@ -1,0 +1,408 @@
+"""Device-executor backend (ROADMAP: "GPU backend behind the Backend
+protocol").
+
+The dispatch layer's three existing backends all execute on CPU threads;
+this module adds the first backend whose cost structure is qualitatively
+different: a **device executor** that runs compute/model ops as
+jit-compiled JAX functions on an accelerator (GPU/TPU when present —
+this container's jax is CPU-only, so the same code path degrades to a
+"CPU-as-device" executor: one worker thread owning jit-compiled,
+micro-batched XLA execution, which still amortizes per-op Python/eager
+dispatch overhead over the batch).
+
+Execution model (mirrors :class:`repro.serving.batcher.UDFBatcherBackend`):
+one worker thread pulls entities off an inbox, collects a micro-batch of
+up to ``batch_size`` entities held at most ``max_wait_s`` from the first
+member, partitions it by (op signature, payload shape/dtype), and runs
+each partition as ONE device call:
+
+- **native-table ops** (crop/resize/blur/...): the op callable is
+  ``jax.vmap``-lifted over the stacked batch and jit-compiled once per
+  op signature (XLA re-specializes per input shape; batches are padded
+  to power-of-two buckets so the shape set stays small).  Ops with a
+  batched Pallas fast path run it directly on the stacked batch instead
+  of through vmap (``DEVICE_BATCH_PATHS`` — e.g. ``blur`` invokes the
+  Gaussian-blur kernel wrapper once over (B,H,W,C), which lowers to the
+  Pallas kernel on TPU and the jnp reference elsewhere).
+- **device UDFs** (``repro.core.udf.register_device_udf``): the
+  registered callable takes the whole micro-batch
+  (``fn(list_of_images, **options) -> list_of_images``) and owns its own
+  jit/device placement — ``register_model_udf`` registers one that runs
+  a single batched prefill + greedy decode through the serving layer's
+  ``serve_step`` functions.
+
+Replies ride the event loop's existing Thread_3 path as
+``("device", entity, result, err)`` messages on Queue_2 — the same
+handoff remote and batcher replies take, so ERD updates, cache
+prefix-resume snapshots after device segments, cancellation, and
+re-enqueue all behave identically to the other non-native backends.
+
+Cost model (the device term of the dispatch DP)::
+
+    device(op) = wait/2                              expected batching wait
+               + transfer(payload, B)                host->device->host bytes
+               + op_est_device | op_est_native / B   per-entity compute
+               + compile_s / (1 + runs(op))          one-time jit amortization
+               + backlog                             placement-feedback ledger
+
+``transfer`` is a :class:`DeviceCostModel` estimate — a fixed per-call
+dispatch latency amortized over the micro-batch plus bytes/bandwidth
+both ways, calibrated once at construction by timing a real
+``device_put`` round trip (``TransportModel``-style, but measured
+against the actual device).  The compile term starts at the full
+observed jit-compile cost and decays as the op keeps running on the
+device, so a cold device is unattractive for one-off ops but wins
+steady-state — the qualitative difference from thread backends that the
+router's DP has to see.
+
+The default engine never builds this backend (``dispatch="static"`` and
+even ``dispatch="cost"`` without ``device_backend=True`` are unchanged);
+enabling it only ADDS a routing option — correctness is unaffected
+because every backend must be result-equivalent.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.result_cache import op_signature
+
+DEVICE = "device"
+
+_STOP = object()
+
+
+# --------------------------------------------------- pallas fast paths
+def _blur_batch(batch, *, ksize: int = 5, sigma_x: float = 0.0,
+                sigma_y: float = 0.0):
+    """Batched Gaussian blur over (B,H,W,C) — one kernel invocation for
+    the whole micro-batch (Pallas on TPU, jnp reference elsewhere);
+    parameter handling mirrors ``repro.visual.ops.blur`` exactly so the
+    result matches the per-entity native path."""
+    from repro.kernels import ops as kops
+    return kops.gaussian_blur(batch, ksize, sigma_x, sigma_y or None)
+
+
+# ops whose batched device execution bypasses vmap for a direct
+# whole-batch kernel call; fn(batch (B,H,W,C), **op.kwargs) -> batch
+DEVICE_BATCH_PATHS = {
+    "blur": _blur_batch,
+}
+
+
+class DeviceCostModel:
+    """Host↔device transfer + jit-compile cost terms.
+
+    The transfer side mirrors :class:`repro.core.remote.TransportModel`
+    for the PCIe/ICI hop: a fixed per-call dispatch latency (amortized
+    over the micro-batch — one device call serves B entities) plus
+    payload bytes over the h2d and d2h bandwidths.  ``calibrate()``
+    replaces the default bandwidths with measured ones by timing a real
+    ``device_put``/``device_get`` round trip against the target device.
+
+    The compile side is an EWMA of observed first-call (compile) wall
+    times, ``compile_default_s`` until one has been seen.
+    """
+
+    def __init__(self, *, h2d_bytes_s: float = 4e9, d2h_bytes_s: float = 4e9,
+                 dispatch_latency_s: float = 50e-6,
+                 compile_default_s: float = 0.05, alpha: float = 0.25):
+        self.h2d_bytes_s = h2d_bytes_s
+        self.d2h_bytes_s = d2h_bytes_s
+        self.dispatch_latency_s = dispatch_latency_s
+        self.compile_default_s = compile_default_s
+        self.alpha = alpha
+        self._compile_est: Optional[float] = None
+        self.calibrated = False
+
+    def calibrate(self, device, probe_bytes: int = 1 << 20):
+        """Measure real h2d/d2h bandwidth with one probe round trip.
+        Failures (no device, backend quirks) leave the defaults."""
+        import jax
+        try:
+            probe = np.ones(probe_bytes // 4, np.float32)
+            t0 = time.monotonic()
+            on_dev = jax.device_put(probe, device)
+            on_dev.block_until_ready()
+            t1 = time.monotonic()
+            np.asarray(jax.device_get(on_dev))
+            t2 = time.monotonic()
+            if t1 - t0 > 0:
+                self.h2d_bytes_s = probe.nbytes / (t1 - t0)
+            if t2 - t1 > 0:
+                self.d2h_bytes_s = probe.nbytes / (t2 - t1)
+            self.calibrated = True
+        except Exception:  # noqa: BLE001 — calibration is best-effort
+            pass
+
+    def transfer_s(self, nbytes: float, batch: int = 1) -> float:
+        """Seconds to move one entity's payload through the device,
+        with the fixed dispatch latency amortized over the micro-batch
+        (output size approximated by input size)."""
+        nbytes = max(0.0, float(nbytes))
+        return (self.dispatch_latency_s / max(1, batch)
+                + nbytes / self.h2d_bytes_s + nbytes / self.d2h_bytes_s)
+
+    def observe_compile(self, seconds: float):
+        prev = self._compile_est
+        self._compile_est = (seconds if prev is None
+                             else (1 - self.alpha) * prev
+                             + self.alpha * seconds)
+
+    def compile_s(self) -> float:
+        return (self._compile_est if self._compile_est is not None
+                else self.compile_default_s)
+
+
+class DeviceBackend:
+    """Accelerator execution as a dispatch backend (``Backend`` protocol
+    from repro.query.dispatch; see the module docstring for the
+    execution and cost model).
+
+    Built by the engine when ``dispatch="cost"`` and ``device_backend``
+    is enabled; ``bind()`` attaches it to the event loop's Queue_2 and
+    cancellation predicate and starts the worker — separate from
+    ``__init__`` because the engine builds backends before the loop
+    exists (same lifecycle as :class:`UDFBatcherBackend`).
+    """
+
+    name = DEVICE
+
+    def __init__(self, *, batch_size: int = 8, max_wait_s: float = 0.002,
+                 tracker=None, device=None,
+                 cost_model: DeviceCostModel | None = None,
+                 calibrate: bool = True, clock=time.monotonic):
+        from repro.query.dispatch import LoadLedger, OpCostTracker
+        import jax
+        self.batch_size = max(1, batch_size)
+        self.max_wait_s = max(0.0, max_wait_s)
+        self.tracker = tracker or OpCostTracker()
+        self.device = device if device is not None else jax.devices()[0]
+        self.cost_model = cost_model or DeviceCostModel()
+        if calibrate and cost_model is None:
+            self.cost_model.calibrate(self.device)
+        self._clock = clock
+        # single device stream: the worker serializes device calls, so
+        # the ledger drains at 1 work-second per wall second
+        self.ledger = LoadLedger(lambda: 1.0, clock=clock)
+        self.inbox: queue.Queue = queue.Queue()
+        self._reply_to: Optional[queue.Queue] = None
+        self._is_cancelled = lambda qid: False
+        self._thread: Optional[threading.Thread] = None
+        self._jit_cache: dict = {}    # op signature -> jitted batch callable
+        self._compiled: set = set()   # (op signature, batch shape) seen
+        self._runs: dict = {}         # op signature -> device runs so far
+        self.groups_run = 0
+        self.entities_run = 0
+        self.errors = 0
+        self.cancelled_dropped = 0
+        self.compiles = 0
+        self.h2d_bytes = 0
+        self.d2h_bytes = 0
+
+    # -------------------------------------------------- engine plumbing
+    def bind(self, reply_to: queue.Queue, is_cancelled) -> None:
+        """Attach to the event loop (its Queue_2 + cancellation
+        predicate) and start the device worker thread."""
+        self._reply_to = reply_to
+        self._is_cancelled = is_cancelled
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="device-backend")
+        self._thread.start()
+
+    def submit(self, entity) -> None:
+        """Thread_3 hands an entity whose current op is routed here."""
+        self.inbox.put(entity)
+
+    def pending(self) -> int:
+        return self.inbox.qsize()
+
+    def shutdown(self, timeout: float = 5.0) -> None:
+        if self._thread is None:
+            return
+        self.inbox.put(_STOP)
+        self._thread.join(timeout)
+
+    # --------------------------------------------------- Backend protocol
+    def can_run(self, op) -> bool:
+        """Native-table ops are vmappable as-is; anything else needs a
+        registered device UDF."""
+        from repro.core.udf import has_device_udf
+        from repro.visual.ops import NATIVE_OPS
+        return op.name in NATIVE_OPS or has_device_udf(op.name)
+
+    def _per_entity_estimate(self, op) -> float:
+        """Per-entity device compute: the observed device EWMA once this
+        op has run here, else the native estimate amortized over the
+        micro-batch (one vectorized call serves the whole batch — the
+        same optimistic prior the batcher backend uses)."""
+        if self.tracker.known(op, kind="device"):
+            return self.tracker.estimate(op, kind="device")
+        return self.tracker.estimate(op) / self.batch_size
+
+    def estimate(self, op, payload_bytes: int) -> float:
+        compile_amort = (self.cost_model.compile_s()
+                         / (1.0 + self._runs.get(op_signature(op), 0)))
+        return (self.max_wait_s / 2.0
+                + self.cost_model.transfer_s(payload_bytes,
+                                             batch=self.batch_size)
+                + self._per_entity_estimate(op)
+                + compile_amort
+                + self.ledger.backlog_s())
+
+    def queue_depth(self) -> int:
+        return self.inbox.qsize()
+
+    def note_placed(self, op) -> None:
+        self.ledger.add(self._per_entity_estimate(op))
+
+    def stats(self) -> dict:
+        return {"device": str(self.device),
+                "platform": getattr(self.device, "platform", "?"),
+                "calibrated": self.cost_model.calibrated,
+                "groups_run": self.groups_run,
+                "entities_run": self.entities_run,
+                "errors": self.errors,
+                "cancelled_dropped": self.cancelled_dropped,
+                "pending": self.pending(),
+                "compiles": self.compiles,
+                "jit_entries": len(self._jit_cache),
+                "h2d_bytes": self.h2d_bytes,
+                "d2h_bytes": self.d2h_bytes}
+
+    # ------------------------------------------------------- worker loop
+    def _run(self):
+        from repro.query.dispatch import collect_microbatch
+        while True:
+            first = self.inbox.get()
+            if first is _STOP:
+                return
+            group, stop = collect_microbatch(
+                self.inbox, first, size=self.batch_size,
+                max_wait_s=self.max_wait_s, clock=self._clock, stop=_STOP)
+            # partition: one device call covers one (op, shape, dtype)
+            by_key: dict = {}
+            for ent in group:
+                arr = np.asarray(ent.data)
+                key = (ent.current_op(), arr.shape, str(arr.dtype))
+                by_key.setdefault(key, []).append(ent)
+            for (op, _shape, _dtype), ents in by_key.items():
+                self._run_partition(op, ents)
+            if stop:
+                return
+
+    def _run_partition(self, op, ents):
+        live = []
+        for ent in ents:
+            if self._is_cancelled(ent.query_id):
+                self.cancelled_dropped += 1
+            else:
+                live.append(ent)
+        if not live:
+            return
+        from repro.core.udf import get_device_udf, has_device_udf
+        sig = op_signature(op)
+        first_run = sig not in self._runs
+        try:
+            if has_device_udf(op.name):
+                t0 = self._clock()
+                results = get_device_udf(op.name)(
+                    [e.data for e in live], **op.kwargs)
+                exec_s = self._clock() - t0
+                if len(results) != len(live):
+                    # same contract as batched UDFs: a short result list
+                    # must never strand unanswered entities
+                    raise ValueError(
+                        f"device UDF {op.name!r} returned {len(results)} "
+                        f"results for {len(live)} inputs")
+            else:
+                results, exec_s = self._run_native_batch(op, live)
+        except Exception as e:  # noqa: BLE001 — report, don't kill worker
+            self.errors += 1
+            for ent in live:
+                self._reply_to.put(("device", ent, None, e))
+            return
+        # the device EWMA must hold PURE per-entity execution seconds —
+        # estimate() adds transfer and compile amortization separately,
+        # so feeding them into the EWMA would double-count.  The native
+        # path excludes transfer by construction (exec_s spans only the
+        # compiled call); an op's FIRST run is skipped entirely because
+        # its wall is dominated by trace+compile (device UDFs own their
+        # jits, so their first call is equally compile-contaminated).
+        if not first_run:
+            self.tracker.observe(op, exec_s / len(live), kind="device",
+                                 out_bytes=getattr(results[0], "nbytes",
+                                                   None))
+        self._runs[sig] = self._runs.get(sig, 0) + 1
+        self.groups_run += 1
+        self.entities_run += len(live)
+        for ent, res in zip(live, results):
+            self._reply_to.put(("device", ent, res, None))
+
+    # ------------------------------------------------- native batch path
+    @staticmethod
+    def _bucket(n: int) -> int:
+        """Next power of two ≥ n — batches are padded up to a bucket so
+        XLA sees a handful of batch shapes instead of one per group
+        size (padded rows are computed independently and sliced away)."""
+        b = 1
+        while b < n:
+            b <<= 1
+        return b
+
+    def _run_native_batch(self, op, ents) -> tuple:
+        """Returns ``(results, exec_seconds)`` where the seconds span
+        ONLY the compiled device call — transfer (device_put /
+        device_get) is excluded because the cost model charges it via
+        its own calibrated term."""
+        import jax
+        arrs = [np.asarray(e.data) for e in ents]
+        if arrs[0].ndim != 3:
+            # video (T,H,W,C) and other non-image payloads: host
+            # fallback through the standard per-entity path (run_op's
+            # frame loop is numpy-side; stacking would force one giant
+            # compile per clip length for little gain)
+            from repro.core.pipeline import run_op
+            t0 = self._clock()
+            return [run_op(op, a) for a in arrs], self._clock() - t0
+        n = len(arrs)
+        batch = np.stack(arrs)
+        pad = self._bucket(n) - n
+        if pad:
+            batch = np.concatenate(
+                [batch, np.repeat(batch[-1:], pad, axis=0)])
+        on_dev = jax.device_put(batch, self.device)
+        on_dev.block_until_ready()
+        self.h2d_bytes += batch.nbytes
+        sig = op_signature(op)
+        fn = self._jit_cache.get(sig)
+        if fn is None:
+            kwargs = op.kwargs
+            if op.name in DEVICE_BATCH_PATHS:
+                fast = DEVICE_BATCH_PATHS[op.name]
+                fn = jax.jit(lambda b: fast(b, **kwargs))
+            else:
+                from repro.visual.ops import apply_native_op
+                fn = jax.jit(jax.vmap(
+                    lambda img: apply_native_op(op.name, img, kwargs)))
+            self._jit_cache[sig] = fn
+        ckey = (sig, batch.shape)
+        fresh = ckey not in self._compiled
+        t1 = self._clock()
+        out = fn(on_dev)
+        out.block_until_ready()
+        exec_s = self._clock() - t1
+        if fresh:
+            self._compiled.add(ckey)
+            self.compiles += 1
+            # first-call wall ≈ trace + compile (the steady-state run is
+            # negligible next to it) — good enough for the amortization
+            # term, which only needs the right order of magnitude
+            self.cost_model.observe_compile(exec_s)
+        res = np.asarray(jax.device_get(out))
+        self.d2h_bytes += res.nbytes
+        return [res[i] for i in range(n)], exec_s

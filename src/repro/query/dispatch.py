@@ -17,7 +17,13 @@ Backends (all behind the common :class:`Backend` protocol):
 - **batcher**  — grouped UDF execution
   (:class:`repro.serving.batcher.UDFBatcherBackend`): ops with a
   registered batched variant (``register_batched_udf`` — e.g. model
-  UDFs, whose GroupBatcher amortizes prefill+decode over a group).
+  UDFs, whose GroupBatcher amortizes prefill+decode over a group);
+- **device**   — accelerator execution
+  (:class:`repro.query.device_backend.DeviceBackend`, built only when
+  the engine enables ``device_backend``): native-table ops and ops with
+  a registered device UDF (``register_device_udf``) run as jit-compiled
+  JAX on the device, micro-batched; the first backend whose cost adds
+  host↔device transfer and one-time jit-compile amortization terms.
 
 Cost model (ARCHITECTURE.md "Dispatch" has the diagram)::
 
@@ -25,6 +31,8 @@ Cost model (ARCHITECTURE.md "Dispatch" has the diagram)::
     remote(op)  = transport.cost(nbytes) + op_est
                   + pending_entities · lat_est / κ + backlog_remote / κ
     batcher(op) = wait/2 + op_est / G          + backlog_batcher
+    device(op)  = wait/2 + transfer(nbytes, B) + op_est_dev
+                  + compile_s / (1 + runs)     + backlog_device
 
 where ``op_est`` is an EWMA of observed per-op execution seconds
 (:class:`OpCostTracker`, calibrated online by the native workers and the
@@ -53,6 +61,7 @@ byte-identically.
 from __future__ import annotations
 
 import abc
+import queue
 import threading
 import time
 from typing import Optional
@@ -62,12 +71,13 @@ from repro.core.result_cache import op_signature
 NATIVE = "native"
 REMOTE = "remote"
 BATCHER = "batcher"
+DEVICE = "device"
 
 _INF = float("inf")
 
 
 def validate_overrides(overrides: dict | None,
-                       known=(NATIVE, REMOTE, BATCHER)) -> dict:
+                       known=(NATIVE, REMOTE, BATCHER, DEVICE)) -> dict:
     """Shape-check a ``cost_overrides`` mapping ({op_name: {backend:
     seconds}}).  The engine calls this BEFORE spawning any pool/loop/
     batcher threads, so a malformed knob raises without leaking them."""
@@ -85,6 +95,31 @@ def validate_overrides(overrides: dict | None,
     return overrides
 
 
+def collect_microbatch(inbox, first, *, size: int, max_wait_s: float,
+                       clock=time.monotonic, stop=None):
+    """Shared micro-batch gather loop for offload backends (batcher and
+    device workers): collect up to ``size`` items from ``inbox``
+    starting with ``first``, holding the group open at most
+    ``max_wait_s`` from the first member's arrival.  Returns
+    ``(group, saw_stop)`` — ``saw_stop`` when the ``stop`` sentinel was
+    drained mid-collection, so the worker finishes this group and then
+    exits."""
+    group = [first]
+    deadline = clock() + max_wait_s
+    while len(group) < size:
+        remaining = deadline - clock()
+        if remaining <= 0:
+            break
+        try:
+            nxt = inbox.get(timeout=remaining)
+        except queue.Empty:
+            break
+        if nxt is stop:
+            return group, True
+        group.append(nxt)
+    return group, False
+
+
 class OpCostTracker:
     """EWMA of observed per-op execution seconds, keyed by canonical op
     signature.  ``kind="native"`` samples come from the native workers
@@ -96,7 +131,8 @@ class OpCostTracker:
         self.default_s = default_s
         self.alpha = alpha
         self._lock = threading.Lock()
-        self._est: dict[str, dict[tuple, float]] = {"native": {}, "batched": {}}
+        self._est: dict[str, dict[tuple, float]] = {
+            "native": {}, "batched": {}, "device": {}}
         self._out_bytes: dict[tuple, float] = {}
 
     def observe(self, op, seconds: float, kind: str = "native",
@@ -173,27 +209,45 @@ class LoadLedger:
 class Backend(abc.ABC):
     """What the router needs from an execution backend.  Execution
     mechanics stay where they live (event loop / remote pool / batcher
-    worker); this protocol only exposes placement-relevant surface."""
+    worker / device worker); this protocol only exposes the
+    placement-relevant surface.  Implementations:
+    :class:`NativeBackend`, :class:`RemoteBackend`,
+    :class:`repro.serving.batcher.UDFBatcherBackend`, and
+    :class:`repro.query.device_backend.DeviceBackend` (the latter two
+    satisfy the protocol structurally rather than by subclassing —
+    the router only requires the four methods and ``name``).
+
+    The one hard semantic contract: backends are *interchangeable* —
+    every backend that ``can_run`` an op must produce a result
+    equivalent to every other backend's (the router is free to place
+    the same op differently on every call)."""
 
     name: str = "?"
 
     @abc.abstractmethod
     def can_run(self, op) -> bool:
-        """Whether this backend can execute ``op`` at all (an override
-        never bypasses this)."""
+        """Whether this backend can execute ``op`` at all.  A cost
+        override never bypasses this — pinning an op cheap on a backend
+        that cannot run it still costs ``inf`` there."""
 
     @abc.abstractmethod
     def estimate(self, op, payload_bytes: int) -> float:
         """Estimated seconds for ``op`` on this backend right now,
-        including queueing/transport/amortization terms."""
+        including queueing/transport/amortization terms.
+        ``payload_bytes`` is the router's estimate of the op's INPUT
+        payload (threaded through the chain from observed output-size
+        EWMAs), for backends with a transfer term."""
 
     @abc.abstractmethod
     def queue_depth(self) -> int:
-        """Entities currently waiting on this backend."""
+        """Entities currently waiting on this backend (surfaced in
+        ``dispatch_stats()["queue_depths"]``)."""
 
     def note_placed(self, op):
         """Router feedback: ``op`` was just routed here; add its
-        projected work to the backend's ledger.  Default: no ledger."""
+        projected work to the backend's leaky-bucket ledger so one
+        expand's fan-out spreads across backends instead of herding
+        onto the first-cheapest.  Default: no ledger."""
 
 
 class NativeBackend(Backend):

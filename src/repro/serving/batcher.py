@@ -261,25 +261,14 @@ class UDFBatcherBackend:
 
     # ------------------------------------------------------- worker loop
     def _run(self):
+        from repro.query.dispatch import collect_microbatch
         while True:
             first = self.inbox.get()
             if first is _STOP:
                 return
-            group = [first]
-            deadline = self._clock() + self.max_wait_s
-            stop = False
-            while len(group) < self.group_size:
-                remaining = deadline - self._clock()
-                if remaining <= 0:
-                    break
-                try:
-                    nxt = self.inbox.get(timeout=remaining)
-                except queue.Empty:
-                    break
-                if nxt is _STOP:
-                    stop = True
-                    break
-                group.append(nxt)
+            group, stop = collect_microbatch(
+                self.inbox, first, size=self.group_size,
+                max_wait_s=self.max_wait_s, clock=self._clock, stop=_STOP)
             # partition by op: entities collected in one window may carry
             # different ops; only same-op entities share a batched call
             by_op: dict = {}

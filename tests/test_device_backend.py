@@ -1,0 +1,359 @@
+"""Device-executor backend: placement only when the transfer+compile-
+amortized estimate wins, forced cost regimes, micro-batch cancellation
+drains, and the device-off engine's byte-identity with static dispatch."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import VDMSAsyncEngine
+from repro.core.pipeline import make_op
+from repro.core.remote import TransportModel
+from repro.core.result_cache import op_signature
+from repro.core.udf import register_device_udf, register_udf
+from repro.query.device_backend import DeviceBackend, DeviceCostModel
+from repro.query.dispatch import BackendRouter, Backend, OpCostTracker
+
+FAST = TransportModel(network_latency_s=0.001, service_time_s=0.002)
+
+# a pipeline of index-permutation + comparison ops: bit-exact under ANY
+# execution strategy (eager, jit, vmap), so responses can be compared
+# byte-for-byte across backends — float ops like blur/resize may differ
+# in the last ulp between eager per-entity and fused batched execution
+EXACT_PIPE = [
+    {"type": "crop", "x": 2, "y": 2, "width": 16, "height": 16},
+    {"type": "rotate", "k": 1},
+    {"type": "flip", "axis": "horizontal"},
+    {"type": "threshold", "value": 0.5},
+]
+
+# pin the rotate op onto the device; everything else stays native
+DEVICE_PIN = {
+    "rotate": {"device": 1e-9, "native": 10.0, "remote": 10.0,
+               "batcher": 10.0},
+}
+
+
+def _mk_engine(**kw):
+    kw.setdefault("num_remote_servers", 2)
+    kw.setdefault("transport", FAST)
+    return VDMSAsyncEngine(**kw)
+
+
+def _add_images(eng, n=6, size=24, category="dev"):
+    rng = np.random.default_rng(5)
+    for i in range(n):
+        img = rng.uniform(0, 1, (size, size, 3)).astype(np.float32)
+        eng.add_entity("image", img, {"category": category, "idx": i})
+
+
+def _find(category="dev", ops=EXACT_PIPE, kind="FindImage"):
+    return [{kind: {"constraints": {"category": ["==", category]},
+                    "operations": ops}}]
+
+
+def _assert_same_entities(a: dict, b: dict):
+    assert list(a["entities"]) == list(b["entities"])
+    for eid in a["entities"]:
+        np.testing.assert_array_equal(np.asarray(a["entities"][eid]),
+                                      np.asarray(b["entities"][eid]))
+
+
+# ------------------------------------------------------ knob validation
+def test_device_backend_requires_cost_dispatch():
+    before = threading.active_count()
+    with pytest.raises(ValueError, match="device_backend"):
+        _mk_engine(device_backend=True)                    # static default
+    with pytest.raises(ValueError, match="device_backend"):
+        _mk_engine(dispatch="native", device_backend=True)
+    assert threading.active_count() == before
+
+
+def test_device_override_rejected_without_device_backend():
+    # pinning a device regime on an engine that never built the device
+    # backend must fail fast, BEFORE any loop/batcher thread exists
+    before = threading.active_count()
+    with pytest.raises(ValueError, match="device"):
+        _mk_engine(dispatch="cost", cost_overrides=DEVICE_PIN)
+    assert threading.active_count() == before
+
+
+def test_device_off_cost_engine_matches_static():
+    # the device backend is opt-in: a plain cost engine neither builds
+    # it nor places anything on it, and its responses stay byte-equal
+    # to the paper-faithful static engine
+    eng_sta = _mk_engine()
+    eng_cost = _mk_engine(dispatch="cost")
+    try:
+        assert eng_cost.device_backend is None
+        assert "device" not in eng_cost.router.placements
+        _add_images(eng_sta)
+        _add_images(eng_cost)
+        r_sta = eng_sta.execute(_find(), timeout=60)
+        r_cost = eng_cost.execute(_find(), timeout=60)
+        _assert_same_entities(r_sta, r_cost)
+        assert "device" not in eng_cost.dispatch_stats()
+    finally:
+        eng_sta.shutdown()
+        eng_cost.shutdown()
+
+
+# ------------------------------------------------- forced device regime
+def test_forced_device_regime_routes_and_matches_static():
+    eng_sta = _mk_engine()
+    eng_dev = _mk_engine(dispatch="cost", device_backend=True,
+                         cost_overrides=DEVICE_PIN,
+                         device_max_wait_ms=50.0)
+    try:
+        _add_images(eng_sta)
+        _add_images(eng_dev)
+        r_sta = eng_sta.execute(_find(), timeout=60)
+        r_dev = eng_dev.execute(_find(), timeout=60)
+        assert r_dev["stats"]["failed"] == 0
+        _assert_same_entities(r_sta, r_dev)
+        stats = eng_dev.dispatch_stats()
+        assert stats["placements"]["device"] == 6      # rotate, per entity
+        d = stats["device"]
+        assert d["entities_run"] == 6
+        assert d["groups_run"] >= 1
+        assert d["pending"] == 0
+        assert d["compiles"] >= 1
+        assert d["h2d_bytes"] > 0 and d["d2h_bytes"] > 0
+    finally:
+        eng_sta.shutdown()
+        eng_dev.shutdown()
+
+
+def test_device_microbatches_respect_batch_size():
+    eng = _mk_engine(dispatch="cost", device_backend=True,
+                     device_batch_size=4, device_max_wait_ms=200.0,
+                     cost_overrides=DEVICE_PIN)
+    try:
+        _add_images(eng, n=8)
+        res = eng.execute(_find(ops=[{"type": "rotate", "k": 1}]),
+                          timeout=60)
+        assert res["stats"]["failed"] == 0
+        d = eng.dispatch_stats()["device"]
+        assert d["entities_run"] == 8
+        assert d["groups_run"] >= 2       # 8 entities, groups capped at 4
+    finally:
+        eng.shutdown()
+
+
+def test_device_udf_result_count_contract():
+    # a device UDF returning fewer results than inputs must surface as
+    # per-entity failures, never strand entities (the query would hang)
+    register_udf("dev_short", lambda img: np.asarray(img))
+    register_device_udf("dev_short", lambda imgs: [])     # always short
+    eng = _mk_engine(dispatch="cost", device_backend=True,
+                     device_max_wait_ms=100.0,
+                     cost_overrides={"dev_short": {"device": 1e-9,
+                                                   "native": 10.0,
+                                                   "remote": 10.0}})
+    try:
+        _add_images(eng, n=4)
+        res = eng.execute(_find(ops=[
+            {"type": "udf", "options": {"id": "dev_short"}}]), timeout=30)
+        assert res["stats"]["failed"] == 4
+        assert eng.dispatch_stats()["device"]["errors"] >= 1
+    finally:
+        eng.shutdown()
+
+
+def test_video_entities_fall_back_without_failing():
+    # (T,H,W,C) payloads take the documented host fallback inside the
+    # device worker; results must still match the static engine exactly
+    eng_sta = _mk_engine()
+    eng_dev = _mk_engine(dispatch="cost", device_backend=True,
+                         cost_overrides=DEVICE_PIN,
+                         device_max_wait_ms=50.0)
+    try:
+        rng = np.random.default_rng(9)
+        for e in (eng_sta, eng_dev):
+            clip = rng.uniform(0, 1, (3, 16, 16, 3)).astype(np.float32)
+            e.add_entity("video", clip.copy(), {"category": "vid"})
+            rng = np.random.default_rng(9)   # same clip for both engines
+        q = _find("vid", ops=[{"type": "rotate", "k": 1}], kind="FindVideo")
+        r_sta = eng_sta.execute(q, timeout=60)
+        r_dev = eng_dev.execute(q, timeout=60)
+        assert r_dev["stats"]["failed"] == 0
+        _assert_same_entities(r_sta, r_dev)
+        assert eng_dev.dispatch_stats()["device"]["entities_run"] == 1
+    finally:
+        eng_sta.shutdown()
+        eng_dev.shutdown()
+
+
+# -------------------------------------------- cancellation drains clean
+def test_cancel_drains_inflight_device_microbatches():
+    eng = _mk_engine(dispatch="cost", device_backend=True,
+                     device_max_wait_ms=100.0,
+                     cost_overrides=DEVICE_PIN)
+    try:
+        _add_images(eng, n=10)
+        fut = eng.submit(_find())
+        time.sleep(0.02)          # let some entities reach the device
+        assert fut.cancel()
+        deadline = time.monotonic() + 10
+        while (eng.pool.inflight or eng.loop.queue1.qsize()
+               or eng.device_backend.pending()) \
+                and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert not eng.pool.inflight
+        assert eng.loop.queue1.qsize() == 0
+        assert eng.device_backend.pending() == 0
+        assert eng.active_sessions() == 0
+        # engine still healthy, device still serving
+        res = eng.execute(_find(), timeout=60)
+        assert res["stats"]["matched"] == 10
+        assert res["stats"]["failed"] == 0
+    finally:
+        eng.shutdown()
+
+
+# --------------------------------------------------- cost-model units
+class _FixedBackend(Backend):
+    def __init__(self, name, cost):
+        self.name = name
+        self.cost = cost
+        self.placed = []
+
+    def can_run(self, op):
+        return True
+
+    def estimate(self, op, payload_bytes):
+        return self.cost
+
+    def queue_depth(self):
+        return 0
+
+    def note_placed(self, op):
+        self.placed.append(op.name)
+
+
+def _unbound_device(**kw):
+    """A DeviceBackend used purely as a cost model (never bound, no
+    worker thread) with a deterministic, uncalibrated transfer model."""
+    kw.setdefault("cost_model", DeviceCostModel(
+        h2d_bytes_s=1e9, d2h_bytes_s=1e9, dispatch_latency_s=1e-4,
+        compile_default_s=0.05))
+    kw.setdefault("batch_size", 8)
+    kw.setdefault("max_wait_s", 0.002)
+    return DeviceBackend(calibrate=False, **kw)
+
+
+def test_compile_amortization_decays_with_runs():
+    tracker = OpCostTracker()
+    dev = _unbound_device(tracker=tracker)
+    op = make_op("blur", {"ksize": 5})
+    cold = dev.estimate(op, payload_bytes=1000)
+    dev._runs[op_signature(op)] = 9          # ten runs in: 0.05 -> 0.005
+    warm = dev.estimate(op, payload_bytes=1000)
+    assert cold - warm == pytest.approx(0.05 - 0.005, rel=1e-6)
+
+
+def test_transfer_term_scales_with_payload():
+    dev = _unbound_device()
+    op = make_op("blur", {"ksize": 5})
+    small = dev.estimate(op, payload_bytes=1_000)
+    large = dev.estimate(op, payload_bytes=100_000_000)   # 100 MB
+    # 100 MB over 1 GB/s both ways = 0.2 s of pure transfer
+    assert large - small == pytest.approx(0.2, rel=1e-2)
+
+
+def test_router_places_device_only_when_amortized_estimate_wins():
+    tracker = OpCostTracker()
+    dev = _unbound_device(tracker=tracker)
+    native = _FixedBackend("native", 0.05)
+    router = BackendRouter([native, dev], tracker=tracker)
+    op = make_op("blur", {"ksize": 5})
+    ops = [op]
+
+    # cold device: the full 50 ms compile surcharge makes device lose
+    # against 50 ms native (compile + wait + transfer tips it over)
+    assert router.route(ops, payload_bytes=1000) == ["native"]
+
+    # steady state: the op has run on device often (compile amortized
+    # away) and its observed device EWMA is fast -> device wins
+    dev._runs[op_signature(op)] = 500
+    tracker.observe(op, 1e-4, kind="device")
+    assert router.route(ops, payload_bytes=1000) == ["device"]
+
+    # but a huge payload makes the transfer term dominate: back to native
+    assert router.route(ops, payload_bytes=500_000_000) == ["native"]
+
+
+def test_device_prior_amortizes_native_estimate_over_batch():
+    # before any device run, the per-entity prior is native_est / B —
+    # the same optimistic vectorization prior the batcher backend uses
+    tracker = OpCostTracker()
+    dev = _unbound_device(tracker=tracker, batch_size=8)
+    op = make_op("blur", {"ksize": 5})
+    tracker.observe(op, 0.8, kind="native")
+    est = dev.estimate(op, payload_bytes=0)
+    assert est == pytest.approx(
+        0.002 / 2          # wait/2
+        + 1e-4 / 8         # dispatch latency amortized over the batch
+        + 0.8 / 8          # native estimate / batch_size prior
+        + 0.05,            # cold compile surcharge
+        rel=1e-3)
+
+
+def test_can_run_native_table_and_device_udfs_only():
+    dev = _unbound_device()
+    assert dev.can_run(make_op("rotate", {"k": 1}))          # native table
+    assert not dev.can_run(make_op("facedetect_box", {}, where="remote"))
+    register_device_udf("dev_canrun", lambda imgs: list(imgs))
+    assert dev.can_run(make_op("dev_canrun", {}, where="udf"))
+
+
+def test_bad_platform_string_fails_before_any_thread_spawns():
+    before = threading.active_count()
+    with pytest.raises(RuntimeError):
+        _mk_engine(dispatch="cost", device_backend="no_such_platform")
+    assert threading.active_count() == before
+
+
+def test_explicit_cpu_platform_string_resolves():
+    eng = _mk_engine(dispatch="cost", device_backend="cpu",
+                     cost_overrides=DEVICE_PIN)
+    try:
+        assert eng.device_backend.device.platform == "cpu"
+        _add_images(eng, n=2)
+        res = eng.execute(_find(), timeout=60)
+        assert res["stats"]["failed"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_device_override_rejected_under_native_dispatch_too():
+    # under dispatch="native" a device pin would be silently inert (the
+    # StaticRouter ignores overrides and no device backend can exist) —
+    # it must fail at construction like the dispatch="cost" case
+    before = threading.active_count()
+    with pytest.raises(ValueError, match="device"):
+        _mk_engine(dispatch="native", cost_overrides=DEVICE_PIN)
+    assert threading.active_count() == before
+
+
+def test_first_device_run_does_not_poison_the_device_ewma():
+    # the first run of an op on the device is compile-contaminated and
+    # must NOT seed the kind="device" EWMA — estimate() charges compile
+    # via its own amortization term, so double-feeding it would leave
+    # the backend permanently over-priced on the calibrated path
+    eng = _mk_engine(dispatch="cost", device_backend=True,
+                     device_max_wait_ms=50.0, cost_overrides=DEVICE_PIN)
+    try:
+        _add_images(eng, n=4)
+        ops = [{"type": "rotate", "k": 1}]
+        eng.execute(_find(ops=ops), timeout=60)       # first run: compile
+        op = make_op("rotate", {"k": 1})
+        assert not eng.cost_tracker.known(op, kind="device")
+        eng.execute(_find(ops=ops), timeout=60)       # warm run: observed
+        assert eng.cost_tracker.known(op, kind="device")
+        # the pure-exec EWMA must sit far below the compile estimate
+        assert eng.cost_tracker.estimate(op, kind="device") \
+            < eng.device_backend.cost_model.compile_s()
+    finally:
+        eng.shutdown()
