@@ -29,6 +29,7 @@ from repro.core.event_loop import EventLoop
 from repro.core.remote import RemoteServerPool, TransportModel
 from repro.core.result_cache import ResultCache
 from repro.core.session import QueryFuture, QuerySession
+from repro.query.admission import AdmissionController, OverloadError
 from repro.query.dispatch import (BackendRouter, NativeBackend, OpCostTracker,
                                   RemoteBackend, StaticRouter,
                                   validate_overrides)
@@ -88,13 +89,27 @@ class VDMSAsyncEngine:
       ``"tpu"``) pins one.  ``device_batch_size`` /
       ``device_max_wait_ms``: device micro-batching window.
 
+    **Admission control** (off by default) —
+      ``admission``: ``"none"`` (accept every ``submit()``
+      unconditionally, byte-identical to the unbounded engine) |
+      ``"queue"`` (park overflow entities in a priority-ordered pending
+      lane drained as capacity frees) | ``"shed"`` (reject queries that
+      do not fit with a typed
+      :class:`~repro.query.admission.OverloadError` carrying a
+      retry-after estimate).  ``max_inflight_entities``: the hard cap
+      on concurrently in-flight entities (required > 0 once admission
+      is enabled).  ``admission_queue_cap``: bound on pending-lane
+      entities; overflowing it sheds even under ``"queue"``.
+      ``submit(..., priority=)`` orders the pending lane.
+
     Public surface: :meth:`submit` / :meth:`execute` for queries,
     :meth:`add_entity` for ingest, :meth:`scale_remote` for elasticity,
-    and the introspection trio :meth:`utilization` /
-    :meth:`cache_stats` / :meth:`dispatch_stats`, plus the
-    deterministic coalescing controls :meth:`flush_coalesced` /
-    :meth:`pending_coalesced`.  Always call :meth:`shutdown` (all loop,
-    pool, and backend threads are joined)."""
+    and the introspection quartet :meth:`utilization` /
+    :meth:`cache_stats` / :meth:`dispatch_stats` /
+    :meth:`admission_stats`, plus the deterministic coalescing controls
+    :meth:`flush_coalesced` / :meth:`pending_coalesced`.  Always call
+    :meth:`shutdown` (all loop, pool, and backend threads are joined;
+    afterwards ``submit`` raises)."""
 
     def __init__(self, *, num_remote_servers: int = 1,
                  transport: TransportModel | None = None,
@@ -113,7 +128,30 @@ class VDMSAsyncEngine:
                  batcher_max_wait_ms: float = 2.0,
                  device_backend: bool | str = False,
                  device_batch_size: int = 8,
-                 device_max_wait_ms: float = 2.0):
+                 device_max_wait_ms: float = 2.0,
+                 admission: str = "none",
+                 max_inflight_entities: int = 0,
+                 admission_queue_cap: int = 1024):
+        if admission not in ("none", "queue", "shed"):
+            raise ValueError(
+                f"admission must be 'none' (accept everything, the "
+                f"paper-faithful default), 'queue' (park overflow in a "
+                f"priority lane) or 'shed' (reject with OverloadError), "
+                f"got {admission!r}")
+        if admission == "none" and max_inflight_entities:
+            # a cap no policy enforces would be silently inert — same
+            # failure mode as a stray cost override
+            raise ValueError(
+                "max_inflight_entities requires admission='queue' or "
+                "'shed' (admission='none' never consults the cap)")
+        # built pre-thread: a malformed admission knob (cap <= 0, bad
+        # queue cap) must raise before any pool/loop thread exists
+        self.admission_ctl = (
+            AdmissionController(max_inflight=max_inflight_entities,
+                                policy=admission,
+                                queue_cap=admission_queue_cap)
+            if admission != "none" else None)
+        self.admission = admission
         if dispatch not in ("static", "cost", "native"):
             raise ValueError(
                 f"dispatch must be 'static' (paper-faithful placement), "
@@ -236,7 +274,13 @@ class VDMSAsyncEngine:
         self.planner = QueryPlanner(self.meta, self.store,
                                     result_cache=self.result_cache,
                                     router=self.router)
+        if self.admission_ctl is not None:
+            self.admission_ctl.bind(
+                loop=self.loop, pool=self.pool, launch=self._launch_now,
+                offload_backends=(self.batcher_backend, self.device_backend),
+                tracker=self.cost_tracker)
         self._qid = itertools.count()
+        self._shut = False
 
     # ------------------------------------------------------------ ingest
     def add_entity(self, kind: str, data, properties: dict) -> str:
@@ -245,7 +289,7 @@ class VDMSAsyncEngine:
     # ------------------------------------------------------------- query
     def submit(self, query: list[dict] | dict, *,
                on_entity: Optional[Callable[[Entity], None]] = None,
-               cache: bool = True) -> QueryFuture:
+               cache: bool = True, priority: int = 0) -> QueryFuture:
         """Submit a VDMS JSON query; returns immediately with a
         :class:`QueryFuture`.
 
@@ -264,16 +308,40 @@ class VDMSAsyncEngine:
 
         ``cache=False`` makes this query bypass the result cache (no
         reads, no writes); it is a no-op when the engine was built
-        without a cache (``cache_capacity=0``, the default)."""
+        without a cache (``cache_capacity=0``, the default).
+
+        ``priority`` orders the admission controller's pending lane
+        (higher first, FIFO within a priority); ignored (and harmless)
+        when ``admission="none"``.  Under ``admission="shed"`` a query
+        whose first phase does not fit under ``max_inflight_entities``
+        raises :class:`~repro.query.admission.OverloadError` from this
+        call — fail fast, with ``retry_after_s`` attached — and nothing
+        of it is launched."""
+        if self._shut:
+            raise RuntimeError("engine is shut down")
         cmds = parse_query(query)
         plan = self.planner.compile(cmds)
         qid = str(next(self._qid))
         session = QuerySession(qid, plan, self, on_entity=on_entity,
-                               use_cache=cache)
+                               use_cache=cache, priority=priority)
         fut = QueryFuture(session)     # built before launch: the return
         with self._session_lock:       # after start() is a single bytecode
+            if self._shut:
+                # re-checked under the lock shutdown() snapshots with: a
+                # session registered here is in that snapshot and gets
+                # cancelled; one refused here never launches — either
+                # way the future resolves, never a post-shutdown hang
+                raise RuntimeError("engine is shut down")
             self._sessions[qid] = session
         session.start()
+        if self.admission_ctl is not None:
+            # shed fails FAST: an OverloadError raised while start() ran
+            # phase 0 on this thread surfaces here as the submit()
+            # exception (the session is already discarded and its future
+            # resolved — callers holding neither see a hang)
+            exc = session.sync_overload()
+            if exc is not None:
+                raise exc
         return fut
 
     def execute(self, query: list[dict] | dict, timeout: float | None = None,
@@ -297,13 +365,76 @@ class VDMSAsyncEngine:
                 use_cache: bool = True) -> list[Entity]:
         return self.planner.expand(cplan, qid, use_cache)
 
-    def _launch(self, ents: list[Entity]):
+    def _admission_precheck(self, cplans, *, qid: str, first_phase: bool,
+                            use_cache: bool = True):
+        """Pre-expand overload gate, deciding before any expansion work
+        happens.  It runs in exactly two situations:
+
+        - an **Add barrier phase** (Add is always the sole member of
+          its phase, so the estimate is O(1)) — the controller
+          atomically decides AND **reserves** the capacity under both
+          policies, because the admission decision (shed, or queue-cap
+          overflow) must come before the barrier's ingest side effect,
+          and a check without a claim would let two queries racing the
+          same last slot both pass, both ingest, then have one rejected
+          post-ingest;
+        - a **Find phase when the controller is saturated** — but only
+          when the result cache cannot serve it (cache off, or the
+          query opted out): entities the cache resolves as instant full
+          hits consume no capacity and never reach :meth:`_launch`, so
+          shedding on the raw match count would reject free queries.
+          Find expansion has no side effects, so this stays an
+          advisory check (no reservation).
+
+        No-op on the uncontended path; the post-expand check in
+        :meth:`_launch` (which sees only the entities that actually
+        need capacity) stays the authority."""
+        ctl = self.admission_ctl
+        if ctl is None:
+            return
+        is_add_phase = any(cp.command.verb == "add" for cp in cplans)
+        if is_add_phase:
+            ctl.reserve(qid, self.planner.estimate_fanout(cplans),
+                        first_phase=first_phase)
+            return
+        if not ctl.saturated():
+            return
+        if self.result_cache is not None and use_cache:
+            return
+        ctl.precheck(self.planner.estimate_fanout(cplans),
+                     first_phase=first_phase)
+
+    def _launch(self, ents: list[Entity], *, priority: int = 0,
+                first_phase: bool = True):
+        """Launch one phase's entities, gated by admission control when
+        enabled: the controller returns the subset that fits under
+        ``max_inflight_entities`` now, parks the rest in its pending
+        lane, or raises :class:`OverloadError` (shedding) — in which
+        case nothing was launched or queued."""
+        ctl = self.admission_ctl
+        if ctl is not None:
+            qid = ents[0].query_id if ents else ""
+            ents = ctl.admit_phase(qid, ents, priority,
+                                   first_phase=first_phase)
+            if qid and self._is_cancelled(qid):
+                # cancel raced the admission: if its drop_query ran
+                # BEFORE admit_phase re-entered this query in the
+                # ledger, the slots just taken would leak forever
+                # (workers skip cancelled entities without a completion
+                # callback).  Release them; keep only other queries'
+                # drained pending entities.
+                ents = [e for e in ents if e.query_id != qid]
+                ents += ctl.drop_query(qid)
+        self._launch_now(ents)
+
+    def _launch_now(self, ents: list[Entity]):
         # Pointers land on Queue_1 as one batch: workers wake only after
         # the whole phase is queued, so submit() stays milliseconds-fast
         # instead of GIL-starving behind already-running native work.
         for e in ents:
             self.erd.update(e, "enqueued")
-        self.loop.enqueue_many(ents)
+        if ents:
+            self.loop.enqueue_many(ents)
 
     def _store_result(self, ent: Entity):
         self.store.put(ent.eid, np.asarray(ent.data))
@@ -315,8 +446,24 @@ class VDMSAsyncEngine:
     def _entity_done(self, ent: Entity):
         with self._session_lock:
             session = self._sessions.get(ent.query_id)
-        if session is not None:
-            session.entity_done(ent)
+        try:
+            if session is not None:
+                session.entity_done(ent)
+        finally:
+            if self.admission_ctl is not None and not ent.admission_released:
+                # a completed entity frees an in-flight slot: drain the
+                # pending lane right here on the event-loop thread that
+                # delivered the completion (no polling thread needed).
+                # In a finally: a raising session callback (e.g. a
+                # blob-store write-back failure) must never leak the
+                # slot — a few leaks would pin the ledger at the cap and
+                # stall every later query.  The per-entity flag keeps
+                # the release idempotent: after such a raise the worker
+                # error path delivers the SAME entity here a second
+                # time, which must not double-release capacity.
+                ent.admission_released = True
+                self._launch_now(
+                    self.admission_ctl.note_done(ent.query_id))
 
     def _is_cancelled(self, qid: str) -> bool:
         # hot path (checked at every op boundary by every worker): a bare
@@ -331,11 +478,15 @@ class VDMSAsyncEngine:
 
     def _discard_session(self, qid: str):
         """Cancellation/timeout cleanup: forget the session, drop its
-        queued native work and its in-flight remote requests."""
+        queued native work, its in-flight remote requests, and its
+        pending/in-flight admission ledger entries (freed capacity
+        immediately admits other queries' pending entities)."""
         with self._session_lock:
             self._sessions.pop(qid, None)
         self.loop.discard_query(qid)
         self.pool.drop_query(qid)
+        if self.admission_ctl is not None:
+            self._launch_now(self.admission_ctl.drop_query(qid))
 
     def active_sessions(self) -> int:
         with self._session_lock:
@@ -392,6 +543,18 @@ class VDMSAsyncEngine:
             out["device"] = self.device_backend.stats()
         return out
 
+    def admission_stats(self) -> dict:
+        """Admission-control counters (``{"policy": "none"}`` alone when
+        admission is off): the live ``inflight`` / ``peak_inflight`` /
+        ``pending`` ledger, lifetime ``admitted`` / ``queued`` /
+        ``shed`` / ``completed`` / ``dropped`` counts, the
+        ``completion_rate_est`` feeding retry-after estimates, and the
+        ``load`` score component snapshot (see
+        :meth:`repro.query.admission.AdmissionController.load_score`)."""
+        if self.admission_ctl is None:
+            return {"policy": "none"}
+        return self.admission_ctl.stats()
+
     def pending_coalesced(self) -> int:
         """Entities buffered in open coalescing groups right now — the
         deterministic signal to poll instead of sleeping out the
@@ -407,8 +570,23 @@ class VDMSAsyncEngine:
         self.loop.flush_coalesced()
 
     def shutdown(self):
+        """Deterministic teardown, safe with sessions still in flight:
+        new ``submit``\\ s are refused first, every live session is
+        cancelled (blocked ``result()`` callers wake with
+        ``CancelledError``), pending admissions are dropped, the
+        offload backends drain behind their poison pills (late routed
+        work fails loudly instead of vanishing), and every loop, pool,
+        and backend thread is joined.  Idempotent."""
         with self._session_lock:
+            # setting the flag under the registration lock makes the
+            # snapshot below complete: every submit() that got past the
+            # flag is in it, every later one raises
+            self._shut = True
             live = list(self._sessions.values())
+        if self.admission_ctl is not None:
+            # refuse new admissions before cancelling sessions, so a
+            # cancel-triggered drain cannot relaunch pending work
+            self.admission_ctl.shutdown()
         for s in live:            # wake any blocked result() callers
             s.cancel()
         if self.batcher_backend is not None:

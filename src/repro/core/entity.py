@@ -37,6 +37,10 @@ class Entity:
     # runs with dispatch != "static"; None reproduces the static rule
     # "native if op.is_native else remote" exactly):
     route: Optional[list] = None  # backend name per op, parallel to ops
+    # admission ledger: set once when the engine releases this entity's
+    # in-flight slot, so the error path's second on_entity_done call
+    # for the same entity can never double-release capacity
+    admission_released: bool = False
 
     def current_op(self):
         return self.ops[self.op_index] if self.op_index < len(self.ops) else None

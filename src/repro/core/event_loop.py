@@ -149,6 +149,15 @@ class MeterGroup:
     def busy_seconds(self, since: float = 0.0) -> float:
         return sum(m.busy_seconds(since) for m in self.meters)
 
+    def utilization(self, *, workers: int, window_s: float = 0.25) -> float:
+        """Busy fraction of a ``workers``-wide pool over the trailing
+        ``window_s``, in [0, 1] — the shared overload signal read by
+        both the dispatch cost model (NativeBackend) and the admission
+        controller."""
+        now = time.monotonic()
+        busy = self.busy_seconds(since=now - window_s)
+        return min(1.0, busy / (window_s * max(1, workers)))
+
     @property
     def total_intervals(self) -> int:
         return sum(m.total_intervals for m in self.meters)
@@ -162,6 +171,14 @@ class FairQueue:
     fan-outs are.  ``fair=False`` degrades to one global FIFO (the paper's
     Queue_1).  ``close`` lets getters drain remaining items, then return
     ``None`` so workers can exit and be joined.
+
+    Per-query lane counters (``depths()``) are maintained *inside the
+    same critical section* as the pop/put/discard that changes them —
+    lane accounting done by callers after ``get`` returned would race
+    ``discard`` on a cancelled query and skew the counts, and the
+    round-robin rotation consults the counter to decide whether a lane
+    stays in rotation, so a skewed counter starves later queries.  The
+    counters double as the admission controller's Queue_1 depth signal.
     """
 
     def __init__(self, fair: bool = True):
@@ -170,6 +187,7 @@ class FairQueue:
         self._lanes: dict[str, collections.deque] = {}
         self._rr: collections.deque[str] = collections.deque()  # lane rotation
         self._fifo: collections.deque = collections.deque()
+        self._counts: dict[str, int] = {}   # live entities per query lane
         self._closed = False
 
     def put(self, ent: Entity):
@@ -183,10 +201,11 @@ class FairQueue:
         O(ms) even for huge queries)."""
         with self._cv:
             for ent in ents:
+                qid = ent.query_id
+                self._counts[qid] = self._counts.get(qid, 0) + 1
                 if not self.fair:
                     self._fifo.append(ent)
                 else:
-                    qid = ent.query_id
                     lane = self._lanes.get(qid)
                     if lane is None:
                         lane = self._lanes[qid] = collections.deque()
@@ -199,12 +218,18 @@ class FairQueue:
         with self._cv:
             while True:
                 if not self.fair and self._fifo:
-                    return self._fifo.popleft()
+                    ent = self._fifo.popleft()
+                    self._dec_locked(ent.query_id)
+                    return ent
                 if self.fair and self._rr:
                     qid = self._rr.popleft()
                     lane = self._lanes[qid]
                     ent = lane.popleft()
-                    if lane:
+                    # counter update atomic with the pop: rotation below
+                    # trusts it, and discard() may run the instant the
+                    # lock is released
+                    remaining = self._dec_locked(qid)
+                    if remaining:
                         self._rr.append(qid)   # rotate: next lane goes first
                     else:
                         del self._lanes[qid]
@@ -214,15 +239,27 @@ class FairQueue:
                 if not self._cv.wait(timeout):
                     return None
 
+    def _dec_locked(self, qid: str) -> int:
+        n = self._counts.get(qid, 0) - 1
+        if n <= 0:
+            self._counts.pop(qid, None)
+            return 0
+        self._counts[qid] = n
+        return n
+
     def discard(self, query_id: str) -> int:
-        """Drop every queued entity of a cancelled query. Returns count."""
+        """Drop every queued entity of a cancelled query — lane, counter,
+        and rotation entry removed in one critical section. Returns
+        count."""
         with self._cv:
             if not self.fair:
                 kept = [e for e in self._fifo if e.query_id != query_id]
                 n = len(self._fifo) - len(kept)
                 self._fifo = collections.deque(kept)
+                self._counts.pop(query_id, None)
                 return n
             lane = self._lanes.pop(query_id, None)
+            self._counts.pop(query_id, None)
             if lane is None:
                 return 0
             try:
@@ -234,6 +271,12 @@ class FairQueue:
     def qsize(self) -> int:
         with self._cv:
             return len(self._fifo) + sum(len(v) for v in self._lanes.values())
+
+    def depths(self) -> dict[str, int]:
+        """Live per-query lane depths (a copy) — consistent with
+        ``qsize`` because both read under the queue lock."""
+        with self._cv:
+            return dict(self._counts)
 
     def close(self):
         with self._cv:
@@ -321,7 +364,10 @@ class EventLoop:
             except Exception as e:  # noqa: BLE001
                 ent.failed = f"{type(e).__name__}: {e}"
                 self.erd.update(ent, "native-error")
-                self.on_entity_done(ent)
+                try:
+                    self.on_entity_done(ent)
+                except Exception:  # noqa: BLE001 — a completion callback
+                    pass           # that raises must not kill the worker
             finally:
                 meter.stop()
 
@@ -453,10 +499,10 @@ class EventLoop:
                     backend = self._backend_for(ent)
                     if backend == "batcher" \
                             and self.batcher_backend is not None:
-                        self.batcher_backend.submit(ent)
+                        self._submit_offload(self.batcher_backend, ent)
                     elif backend == "device" \
                             and self.device_backend is not None:
-                        self.device_backend.submit(ent)
+                        self._submit_offload(self.device_backend, ent)
                     elif coalesce:
                         op = ent.current_op()
                         group = self._groups.get(op)
@@ -534,6 +580,19 @@ class EventLoop:
             for e in entities:
                 self.pool.dispatch(e, e.current_op(), self.queue2)
 
+    def _submit_offload(self, backend, ent: Entity):
+        """Hand a routed entity to an offload backend (batcher/device).
+        A backend that began shutdown *refuses* late work
+        (``submit`` raises) — fail the entity deterministically instead
+        of letting it vanish into a dead inbox (its session would hang)
+        or letting the raise kill Thread_3."""
+        try:
+            backend.submit(ent)
+        except RuntimeError as e:
+            self._fail_segment(
+                ent, f"{backend.name} op {ent.current_op().name} "
+                     f"rejected: {e}", f"{backend.name}-shutdown")
+
     # --------------------------------------------- shared segment tails
     # one copy of the per-entity reply invariants, used by BOTH the
     # remote and batcher handlers — the dispatch design promises their
@@ -544,16 +603,32 @@ class EventLoop:
         self.erd.update(ent, stage)
         self.on_entity_done(ent)
 
-    def _complete_segment(self, ent: Entity, result, source: str):
+    def _advance_segment(self, ent: Entity, result, source: str):
+        """State half of a segment completion: install the result,
+        advance the op index, update the ERD, and record the cache
+        snapshot.  Deliberately split from :meth:`_finish_segment` — in
+        a coalesced-batch fan-out every member's snapshot must be
+        recorded BEFORE any member's client callback runs, so a
+        callback that raises (or hangs) can never skip the remaining
+        snapshots of its own group."""
         op = ent.current_op()
         ent.data = result
         ent.op_index += 1
         self.erd.update(ent, f"{source}:{op.name}")
         self._record_cache(ent)
+
+    def _finish_segment(self, ent: Entity):
+        """Callback half of a segment completion: hand a finished entity
+        to its session (which runs client callbacks) or re-enqueue it
+        for its next op."""
         if ent.done():
             self.on_entity_done(ent)
         else:
             self.enqueue(ent)      # Q1-Enqueue from Thread_3
+
+    def _complete_segment(self, ent: Entity, result, source: str):
+        self._advance_segment(ent, result, source)
+        self._finish_segment(ent)
 
     def _handle_offload(self, ent: Entity, result, err, source: str):
         """Reply tail for an offload-backend group member (``source`` is
@@ -575,16 +650,32 @@ class EventLoop:
             return
         ents = req.entity if isinstance(req.entity, list) else [req.entity]
         results = result if isinstance(req.entity, list) else [result]
-        for ent, res in zip(ents, results if status == "done" else [None] * len(ents)):
+        # two passes over a (possibly coalesced) batch: first record
+        # every member's state + cache snapshot, then fire completions.
+        # Completion callbacks reach client code (on_entity / done
+        # callbacks), and a client callback that raises mid-fan-out must
+        # not skip the snapshots — or the completions — of the members
+        # behind it in the same group.
+        live: list[Entity] = []
+        for ent, res in zip(ents, results if status == "done"
+                            else [None] * len(ents)):
             if self.is_cancelled(ent.query_id):
                 continue           # cancelled while in flight: drop silently
             if status == "failed":
-                self._fail_segment(
-                    ent,
-                    f"remote op {ent.current_op().name} failed: {payload}",
-                    "remote-error")
-                continue
-            self._complete_segment(ent, res, "remote")
+                ent.failed = (f"remote op {ent.current_op().name} "
+                              f"failed: {payload}")
+                self.erd.update(ent, "remote-error")
+            else:
+                self._advance_segment(ent, res, "remote")
+            live.append(ent)
+        for ent in live:
+            try:
+                if ent.failed:
+                    self.on_entity_done(ent)
+                else:
+                    self._finish_segment(ent)
+            except Exception:  # noqa: BLE001 — a raising client callback
+                pass           # must not strand the rest of the group
     # ---------------------------------------------------------- shutdown
     def shutdown(self, timeout: float = 5.0):
         """Stop and *join* all loop threads (daemon threads abandoned

@@ -316,6 +316,14 @@ class RemoteServerPool:
         dispatch cost model's remote queue-wait term)."""
         return self._lat_est
 
+    def backlog_seconds(self) -> float:
+        """Projected seconds of remote work outstanding right now —
+        pending entities weighted by the amortized per-entity latency
+        estimate, spread over the live servers.  The remote term of the
+        admission controller's load score."""
+        live = max(1, self.live_count())
+        return self.pending_entities() * self._lat_est / live
+
     def shutdown(self, timeout: float = 5.0):
         for s in self.servers:
             s.kill(join_timeout=None)   # signal everyone first ...

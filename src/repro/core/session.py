@@ -27,6 +27,7 @@ from concurrent.futures import CancelledError
 from typing import TYPE_CHECKING, Any, Callable, Optional
 
 from repro.core.entity import Entity
+from repro.query.admission import OverloadError
 
 if TYPE_CHECKING:  # avoid a core <-> query import cycle at runtime
     from repro.query.planner import QueryPlan
@@ -39,12 +40,13 @@ class QuerySession:
 
     def __init__(self, qid: str, plan: "QueryPlan", engine: Any,
                  on_entity: Optional[Callable[[Entity], None]] = None,
-                 use_cache: bool = True):
+                 use_cache: bool = True, priority: int = 0):
         self.qid = qid
         self.plan = plan
         self._engine = engine
         self._on_entity = on_entity
         self.use_cache = use_cache
+        self.priority = priority   # admission pending-lane ordering
         self._cv = threading.Condition()
         self._state = _RUNNING
         self._phase = -1
@@ -76,6 +78,14 @@ class QuerySession:
                 if phase_idx >= len(self.plan.phases):
                     self._finish()
                     return
+                # overload fast path BEFORE expansion: a saturated shed
+                # engine rejects here — crucially before an Add phase's
+                # ingest side effects (a no-op when uncontended or when
+                # admission is off)
+                self._engine._admission_precheck(
+                    self.plan.phases[phase_idx], qid=self.qid,
+                    first_phase=phase_idx == 0,
+                    use_cache=self.use_cache)
                 instant: list[Entity] = []   # zero-op entities: already done
                 to_run: list[Entity] = []
                 # Expansion runs UNDER the session lock: an Add phase
@@ -104,7 +114,8 @@ class QuerySession:
                 for e in instant:
                     self._stream(e)
                 if to_run:
-                    self._engine._launch(to_run)
+                    self._engine._launch(to_run, priority=self.priority,
+                                         first_phase=phase_idx == 0)
                     return
                 phase_idx += 1
         except Exception as e:  # noqa: BLE001 — surface via the future
@@ -152,7 +163,17 @@ class QuerySession:
         cplan = self._cmds[ent.cmd_index]
         if cplan.command.verb == "add":
             if cplan.command.operations:
-                self._engine._store_result(ent)
+                try:
+                    self._engine._store_result(ent)
+                except Exception as e:  # noqa: BLE001 — a blob-store
+                    # write-back failure must fail the ENTITY, not
+                    # strand the session: this runs before _pending is
+                    # decremented, and a raise here would re-raise on
+                    # the worker's error-path redelivery of the same
+                    # entity, so _pending would never reach zero and
+                    # result() would hang forever
+                    ent.failed = (f"store write-back failed: "
+                                  f"{type(e).__name__}: {e}")
         elif ent.failed:
             self.stats["failed"] += 1
         self._ent_results[ent.cmd_index][ent.eid] = ent.data
@@ -233,6 +254,15 @@ class QuerySession:
         if self._exc is not None:
             raise self._exc
         return self._result
+
+    def sync_overload(self) -> Optional[OverloadError]:
+        """The :class:`OverloadError` this session failed with, if any —
+        read by ``engine.submit()`` right after the synchronous phase-0
+        launch so a shed query fails fast at the call site instead of
+        only on the future."""
+        with self._cv:
+            exc = self._exc
+        return exc if isinstance(exc, OverloadError) else None
 
     def add_done_callback(self, cb: Callable[[], None]):
         with self._cv:

@@ -1,0 +1,480 @@
+"""Admission control + overload shedding (ROADMAP: "Admission control
+on top of sessions").
+
+The engine accepts every ``submit()`` unconditionally by default — the
+paper's event-driven pipeline scales linearly with remote servers only
+while its queues stay bounded, and under heavy fan-in Queue_1/Queue_2
+and the coalescing/device micro-batch buffers grow without limit until
+latency collapses (the synchronous-saturation failure mode VDMS-Async
+was designed to escape, reproduced by ``benchmarks/admission_bench.py``'s
+unbounded arm).  This module bounds the engine instead:
+
+- an :class:`AdmissionController` tracks the number of **in-flight
+  entities** (launched onto the event loop but not yet completed,
+  failed, or cancelled) against a hard cap ``max_inflight_entities``;
+- ``admission="shed"`` rejects a query whose phase fan-out does not fit
+  under the cap with a typed :class:`OverloadError` carrying a
+  ``retry_after_s`` estimate — nothing of the query is launched;
+- ``admission="queue"`` accepts the query and parks entities that do
+  not fit in a **priority-ordered pending lane** (``submit(...,
+  priority=)``; higher first, FIFO within a priority), bounded by
+  ``admission_queue_cap``.  The lane drains as in-flight entities
+  complete — the drain runs on the event-loop threads that deliver
+  completions, so no extra thread polls for capacity;
+- Add barrier phases **reserve** their capacity atomically *before*
+  expansion runs (``reserve``), because expansion is where the Add's
+  ingest side effect happens: a check-only gate would let two queries
+  racing the same last slot both pass, both ingest, and then have one
+  rejected post-ingest;
+- cancellation / timeout / engine shutdown drop a query's pending
+  admissions exactly the way they drop its queued and in-flight work:
+  ``drop_query`` forgets the pending entities, the in-flight count and
+  any unconsumed reservation in one atomic step, so the cap's ledger
+  can never be skewed by a cancel racing a completion.
+
+The **load score** combines the overload signals the rest of the stack
+already exposes — the admission ledger itself (in-flight fraction), the
+native pool's BusyMeter utilization, Queue_1 depth, the remote pool's
+pending depth weighted by its amortized latency estimate
+(:meth:`repro.core.remote.RemoteServerPool.backlog_seconds`), and the
+batcher/device micro-batch queue depths — into one number (≥ 1.0 means
+saturated).  The *admission decision* is exact on the in-flight ledger
+(that is the invariant benchmarks assert); the score feeds the
+``retry_after_s`` estimate, the saturation fast path that rejects
+before a phase is even expanded, and ``engine.admission_stats()``.
+
+``admission="none"`` (the default) builds none of this: ``submit()``
+behaves byte-identically to the unbounded engine (hash-checked in CI
+via ``benchmarks/admission_bench.py``).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from typing import Any, Callable, Optional
+
+POLICIES = ("none", "queue", "shed")
+
+
+class OverloadError(RuntimeError):
+    """A query was rejected by admission control.
+
+    Attributes:
+      ``retry_after_s`` — estimated seconds until the requested capacity
+      is likely to be available (deficit entities / recent completion
+      rate, clamped to [1e-3, 60]); ``load`` — the load-score component
+      snapshot at rejection time (see
+      :meth:`AdmissionController.load_score`).
+    """
+
+    def __init__(self, msg: str, *, retry_after_s: float = 1.0,
+                 load: dict | None = None):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
+        self.load = load or {}
+
+
+class AdmissionController:
+    """Bounds concurrent in-flight entities and sheds/queues overflow.
+
+    One lock guards the whole ledger — the global in-flight count, the
+    per-query counts, and the pending lane — so every transition
+    (admit, complete, drop, drain) is atomic: a cancel racing a
+    completion can neither double-release nor leak capacity.
+
+    Lifecycle: the engine constructs the controller before any loop
+    thread exists (knob validation must not leak threads), then
+    ``bind``\\ s it to the live signal sources and the launch callable.
+    """
+
+    def __init__(self, *, max_inflight: int, policy: str,
+                 queue_cap: int = 1024, clock=time.monotonic):
+        if policy not in ("queue", "shed"):
+            raise ValueError(
+                f"admission policy must be 'queue' or 'shed' once "
+                f"enabled, got {policy!r}")
+        if max_inflight <= 0:
+            raise ValueError(
+                f"max_inflight_entities must be > 0 when admission is "
+                f"enabled, got {max_inflight}")
+        if queue_cap < 0:
+            raise ValueError(
+                f"admission_queue_cap must be >= 0, got {queue_cap}")
+        self.max_inflight = max_inflight
+        self.policy = policy
+        self.queue_cap = queue_cap
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._inflight = 0
+        self._inflight_by_query: dict[str, int] = {}
+        # pending lane: heap of (-priority, seq, entity); seq keeps FIFO
+        # order within a priority.  _pending_by_query is the liveness
+        # ledger — a heap entry whose query has no pending count is a
+        # tombstone left by drop_query and is skipped at pop time.
+        self._heap: list[tuple[int, int, Any]] = []
+        self._seq = itertools.count()
+        self._pending_total = 0
+        self._pending_by_query: dict[str, int] = {}
+        # pre-ingest reservations (see reserve()): under "shed" a
+        # reservation holds in-flight slots, under "queue" it holds
+        # pending-lane budget, so a query told "admitted" before its
+        # Add barrier wrote can never be rejected afterwards
+        self._reserved_total = 0
+        self._reserved_by_query: dict[str, int] = {}
+        self._closed = False
+        # completion-rate EWMA (entities/second across the whole engine)
+        # — the primary input to the retry-after estimate
+        self._rate = 0.0
+        self._last_done: float | None = None
+        # lifetime counters
+        self.admitted = 0
+        self.queued = 0
+        self.shed = 0
+        self.completed = 0
+        self.dropped = 0
+        self.peak_inflight = 0
+        # live signal sources (bound after the loop exists)
+        self._loop = None
+        self._pool = None
+        self._offload: list = []
+        self._tracker = None
+        self._launch: Optional[Callable[[list], None]] = None
+
+    # ---------------------------------------------------- engine plumbing
+    def bind(self, *, loop, pool, launch, offload_backends=(),
+             tracker=None) -> None:
+        """Attach the live overload-signal sources and the launch
+        callable the drain uses (``engine._launch_now``)."""
+        self._loop = loop
+        self._pool = pool
+        self._offload = [b for b in offload_backends if b is not None]
+        self._tracker = tracker
+        self._launch = launch
+
+    # -------------------------------------------------------- load signal
+    def utilization(self) -> float:
+        """Native-pool busy fraction over the recent window, in [0, 1]
+        (the same BusyMeter signal the dispatch cost model reads)."""
+        if self._loop is None:
+            return 0.0
+        return self._loop.t2_meter.utilization(
+            workers=self._loop.num_native_workers)
+
+    def load_score(self) -> dict:
+        """Single load score plus its components.  ``score >= 1.0``
+        reads as saturated: the in-flight ledger is full, or the queues
+        behind it hold more than a capful of work."""
+        with self._lock:
+            inflight = self._inflight
+            pending = self._pending_total
+        return self._compose_load(inflight, pending)
+
+    def _compose_load(self, inflight: int, pending: int) -> dict:
+        """Assemble the load snapshot from already-read ledger values —
+        takes no controller lock, so it is safe both from
+        :meth:`load_score` and from inside ``_overload_locked`` (which
+        already holds ``_lock``)."""
+        cap = float(self.max_inflight)
+        util = self.utilization()
+        q1 = self._loop.queue1.qsize() if self._loop is not None else 0
+        remote_backlog_s = (self._pool.backlog_seconds()
+                            if self._pool is not None else 0.0)
+        offload_depth = sum(b.queue_depth() for b in self._offload)
+        # per-entity service estimate turns the remote backlog (seconds)
+        # into entity units so every component shares the cap's scale
+        per_entity = self._service_estimate()
+        score = (inflight / cap
+                 + 0.5 * util
+                 + 0.25 * (q1 + pending + offload_depth
+                           + remote_backlog_s / per_entity) / cap)
+        return {"score": score, "inflight_frac": inflight / cap,
+                "native_util": util, "queue1_depth": q1,
+                "pending_admissions": pending,
+                "remote_backlog_s": remote_backlog_s,
+                "offload_depth": offload_depth,
+                "per_entity_est_s": per_entity}
+
+    def _service_estimate(self) -> float:
+        """Per-entity service-time estimate (seconds), best signal
+        first: the observed engine-wide completion rate, else the cost
+        tracker's mean per-op estimate, else the remote pool's
+        amortized latency estimate, else 1 ms.  Lock-free by design
+        (the single float read of ``_rate`` is GIL-atomic and the
+        estimate is heuristic), so it is safe with or without
+        ``_lock`` held."""
+        if self._rate > 0.0:
+            return 1.0 / self._rate
+        if self._tracker is not None:
+            est = self._tracker.mean_estimate()
+            if est is not None:
+                return est
+        if self._pool is not None:
+            return max(1e-4, self._pool.latency_estimate())
+        return 1e-3
+
+    def _overload_locked(self, msg: str, deficit: int) -> OverloadError:
+        retry = min(60.0, max(1e-3, deficit * self._service_estimate()))
+        return OverloadError(f"{msg} (retry_after_s={retry:.3g})",
+                             retry_after_s=retry,
+                             load=self._compose_load(self._inflight,
+                                                     self._pending_total))
+
+    def _never_fits_locked(self, qid: str, n: int) -> OverloadError:
+        """A first phase larger than the whole cap can NEVER be admitted
+        under ``"shed"``, no matter how much capacity frees up —
+        ``retry_after_s`` is ``inf`` so a retry-after-honoring client
+        does not loop forever on an impossible query (``"queue"`` runs
+        it by parking the overflow)."""
+        return OverloadError(
+            f"admission shed: query {qid or '<estimate>'} needs {n} "
+            f"in-flight entities but max_inflight_entities="
+            f"{self.max_inflight}; it can never be admitted under "
+            f"admission='shed' — use admission='queue' or raise the cap",
+            retry_after_s=float("inf"),
+            load=self._compose_load(self._inflight, self._pending_total))
+
+    # ---------------------------------------------------------- admission
+    def saturated(self) -> bool:
+        """Cheap pre-expand fast path: the in-flight ledger is full.
+        Used by the session to fail a shed query *before* expansion
+        (and before an Add phase's ingest side effects)."""
+        return self._inflight >= self.max_inflight
+
+    def _avail_locked(self) -> int:
+        """In-flight slots free right now.  Under ``"shed"`` reserved
+        slots (pre-claimed by Add phases before their ingest) are
+        already spoken for."""
+        avail = self.max_inflight - self._inflight
+        if self.policy == "shed":
+            avail -= self._reserved_total
+        return avail
+
+    def _check_locked(self, qid: str, n: int, *, first_phase: bool) -> None:
+        """THE shed/queue decision, in exactly one place —
+        :meth:`precheck` (advisory, on an estimate), :meth:`reserve`
+        (claiming, pre-ingest) and :meth:`admit_phase` (authoritative,
+        post-expand) all call it.  Raises :class:`OverloadError` iff
+        ``n`` more entities cannot be accepted now."""
+        avail = self._avail_locked()
+        if self.policy == "shed" and first_phase:
+            if n > self.max_inflight:
+                self.shed += 1
+                raise self._never_fits_locked(qid, n)
+            # pending continuation work has first claim on free slots
+            effective = max(0, avail - self._pending_total)
+            if n > effective:
+                self.shed += 1
+                raise self._overload_locked(
+                    f"admission shed: query {qid or '<estimate>'} needs "
+                    f"{n} entities, {effective} in-flight slots free "
+                    f"(max_inflight_entities={self.max_inflight})",
+                    n - effective)
+        else:
+            # under "queue" a reservation holds pending-lane budget
+            reserved = self._reserved_total if self.policy == "queue" else 0
+            will_wait = self._pending_total + reserved + n - max(0, avail)
+            if will_wait > self.queue_cap:
+                self.shed += 1
+                raise self._overload_locked(
+                    f"admission queue full: query {qid or '<estimate>'} "
+                    f"would leave {will_wait} entities pending, over "
+                    f"admission_queue_cap={self.queue_cap}",
+                    will_wait - self.queue_cap)
+
+    def precheck(self, n_estimate: int, *, first_phase: bool) -> None:
+        """Advisory check on an *estimated* fan-out, run before a Find
+        expansion when :meth:`saturated`.  Raises
+        :class:`OverloadError` when the phase certainly cannot be
+        admitted; the post-expand :meth:`admit_phase` remains the
+        authority (the estimate and the expansion race completions)."""
+        if n_estimate <= 0:
+            return
+        with self._lock:
+            if self._closed:
+                raise self._overload_locked("engine is shutting down", 0)
+            self._check_locked("", n_estimate, first_phase=first_phase)
+
+    def reserve(self, qid: str, n: int, *, first_phase: bool) -> None:
+        """Atomically decide AND claim admission for ``n`` entities
+        *before* their side-effectful expansion runs (an Add barrier
+        ingests during expand).  After a successful reserve,
+        :meth:`admit_phase` for the same query consumes the claim and
+        cannot raise for up to ``n`` entities — so two queries racing
+        the same last slot can never both pass a check-only gate, then
+        both ingest, then have one rejected post-ingest.  Dropped by
+        :meth:`drop_query` / :meth:`shutdown` if the query dies before
+        launching."""
+        if n <= 0:
+            return
+        with self._lock:
+            if self._closed:
+                raise self._overload_locked("engine is shutting down", 0)
+            self._check_locked(qid, n, first_phase=first_phase)
+            self._reserved_total += n
+            self._reserved_by_query[qid] = \
+                self._reserved_by_query.get(qid, 0) + n
+
+    def _release_reservation_locked(self, qid: str) -> int:
+        r = self._reserved_by_query.pop(qid, 0)
+        self._reserved_total -= r
+        return r
+
+    def admit_phase(self, qid: str, ents: list, priority: int,
+                    *, first_phase: bool) -> list:
+        """Admit one phase launch of ``len(ents)`` entities.  Returns
+        the entities to launch *now*; the rest wait in the pending lane
+        (``admission="queue"``, or any continuation phase — a query
+        already running is never shed mid-flight).  Raises
+        :class:`OverloadError` atomically — when it raises, nothing of
+        the phase was admitted or queued (and the phase held no
+        reservation, so nothing was ingested either)."""
+        n = len(ents)
+        with self._lock:
+            if n == 0:
+                self._release_reservation_locked(qid)
+                return []
+            if self._closed:
+                self._release_reservation_locked(qid)
+                raise self._overload_locked("engine is shutting down", 0)
+            reserved = self._release_reservation_locked(qid)
+            if self.policy == "shed" and reserved >= n:
+                # pre-claimed slots go straight to in-flight, bypassing
+                # the lane: the decision was made at reserve time
+                # (pre-ingest) and pending work that arrived since does
+                # not get to veto it.  inflight + reserved never
+                # exceeded the cap, so the bound holds through the swap.
+                self._inflight += n
+                self._inflight_by_query[qid] = \
+                    self._inflight_by_query.get(qid, 0) + n
+                self.admitted += n
+                return [*ents, *self._drain_locked()]
+            if reserved < n:
+                # the unreserved remainder must pass the normal check
+                # (raises atomically: the reservation was already
+                # refunded above, nothing is half-claimed)
+                self._check_locked(qid, n - reserved,
+                                   first_phase=first_phase)
+            # every entity enters the lane, then the drain pops in
+            # global priority order — new work can never jump ahead of
+            # equal-or-higher-priority work already waiting
+            for e in ents:
+                heapq.heappush(self._heap, (-priority, next(self._seq), e))
+            self._pending_total += n
+            self._pending_by_query[qid] = \
+                self._pending_by_query.get(qid, 0) + n
+            self.queued += n
+            return self._drain_locked()
+
+    def _drain_locked(self) -> list:
+        """Pop pending entities into the in-flight ledger while slots
+        are free.  Tombstoned entries (queries dropped while pending)
+        are skipped without touching the totals — drop_query already
+        discounted them."""
+        out = []
+        while self._heap and self._inflight < self.max_inflight:
+            _, _, ent = heapq.heappop(self._heap)
+            qid = ent.query_id
+            live = self._pending_by_query.get(qid, 0)
+            if live <= 0:
+                continue            # tombstone from drop_query
+            if live == 1:
+                del self._pending_by_query[qid]
+            else:
+                self._pending_by_query[qid] = live - 1
+            self._pending_total -= 1
+            self._inflight += 1
+            self._inflight_by_query[qid] = \
+                self._inflight_by_query.get(qid, 0) + 1
+            self.admitted += 1
+            out.append(ent)
+        self.peak_inflight = max(self.peak_inflight, self._inflight)
+        return out
+
+    # --------------------------------------------------------- completion
+    def note_done(self, qid: str) -> list:
+        """One of ``qid``'s in-flight entities completed (or failed) its
+        pipeline.  Releases its slot and returns any pending entities
+        the freed capacity now admits — the caller (an event-loop
+        thread) launches them.  A no-op for queries the controller no
+        longer tracks (completion racing a cancel: ``drop_query``
+        already released the slot)."""
+        with self._lock:
+            live = self._inflight_by_query.get(qid, 0)
+            if live <= 0:
+                return []
+            if live == 1:
+                del self._inflight_by_query[qid]
+            else:
+                self._inflight_by_query[qid] = live - 1
+            self._inflight -= 1
+            self.completed += 1
+            now = self._clock()
+            if self._last_done is not None:
+                dt = max(1e-6, now - self._last_done)
+                self._rate = 0.8 * self._rate + 0.2 * (1.0 / dt)
+            self._last_done = now
+            if self._closed:
+                return []
+            return self._drain_locked()
+
+    def drop_query(self, qid: str) -> list:
+        """Cancellation/timeout cleanup: atomically forget the query's
+        pending admissions AND release its in-flight slots (its
+        entities are being dropped by the workers and will never reach
+        ``note_done``).  Returns pending entities of *other* queries
+        the freed capacity now admits."""
+        with self._lock:
+            released = self._inflight_by_query.pop(qid, 0)
+            self._inflight -= released
+            pending = self._pending_by_query.pop(qid, 0)
+            self._pending_total -= pending
+            reserved = self._release_reservation_locked(qid)
+            self.dropped += released + pending + reserved
+            if self._closed or (released == 0 and pending == 0
+                                and reserved == 0):
+                return []
+            return self._drain_locked()
+
+    # ----------------------------------------------------------- shutdown
+    def shutdown(self) -> None:
+        """Refuse new admissions and drop the pending lane (the engine
+        cancels the owning sessions, so their futures resolve with
+        ``CancelledError`` — deterministic, never a hang)."""
+        with self._lock:
+            self._closed = True
+            self._heap.clear()
+            self._pending_total = 0
+            self._pending_by_query.clear()
+            self._reserved_total = 0
+            self._reserved_by_query.clear()
+
+    # -------------------------------------------------------------- stats
+    def inflight(self) -> int:
+        with self._lock:
+            return self._inflight
+
+    def pending(self) -> int:
+        with self._lock:
+            return self._pending_total
+
+    def stats(self) -> dict:
+        with self._lock:
+            out = {
+                "policy": self.policy,
+                "max_inflight_entities": self.max_inflight,
+                "admission_queue_cap": self.queue_cap,
+                "inflight": self._inflight,
+                "peak_inflight": self.peak_inflight,
+                "pending": self._pending_total,
+                "reserved": self._reserved_total,
+                "admitted": self.admitted,
+                "queued": self.queued,
+                "shed": self.shed,
+                "completed": self.completed,
+                "dropped": self.dropped,
+                "completion_rate_est": self._rate,
+            }
+        out["load"] = self.load_score()
+        return out

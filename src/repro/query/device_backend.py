@@ -70,10 +70,9 @@ from typing import Optional
 import numpy as np
 
 from repro.core.result_cache import op_signature
+from repro.query.dispatch import OFFLOAD_STOP, OffloadInboxMixin
 
 DEVICE = "device"
-
-_STOP = object()
 
 
 # --------------------------------------------------- pallas fast paths
@@ -158,7 +157,7 @@ class DeviceCostModel:
                 else self.compile_default_s)
 
 
-class DeviceBackend:
+class DeviceBackend(OffloadInboxMixin):
     """Accelerator execution as a dispatch backend (``Backend`` protocol
     from repro.query.dispatch; see the module docstring for the
     execution and cost model).
@@ -167,7 +166,10 @@ class DeviceBackend:
     is enabled; ``bind()`` attaches it to the event loop's Queue_2 and
     cancellation predicate and starts the worker — separate from
     ``__init__`` because the engine builds backends before the loop
-    exists (same lifecycle as :class:`UDFBatcherBackend`).
+    exists (same lifecycle as :class:`UDFBatcherBackend`, whose inbox
+    lifecycle — gated ``submit``, poison-pill ``shutdown``, post-join
+    drain — this class shares via
+    :class:`repro.query.dispatch.OffloadInboxMixin`).
     """
 
     name = DEVICE
@@ -189,10 +191,9 @@ class DeviceBackend:
         # single device stream: the worker serializes device calls, so
         # the ledger drains at 1 work-second per wall second
         self.ledger = LoadLedger(lambda: 1.0, clock=clock)
-        self.inbox: queue.Queue = queue.Queue()
+        self._init_inbox()
         self._reply_to: Optional[queue.Queue] = None
         self._is_cancelled = lambda qid: False
-        self._thread: Optional[threading.Thread] = None
         self._jit_cache: dict = {}    # op signature -> jitted batch callable
         self._compiled: set = set()   # (op signature, batch shape) seen
         self._runs: dict = {}         # op signature -> device runs so far
@@ -213,19 +214,6 @@ class DeviceBackend:
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="device-backend")
         self._thread.start()
-
-    def submit(self, entity) -> None:
-        """Thread_3 hands an entity whose current op is routed here."""
-        self.inbox.put(entity)
-
-    def pending(self) -> int:
-        return self.inbox.qsize()
-
-    def shutdown(self, timeout: float = 5.0) -> None:
-        if self._thread is None:
-            return
-        self.inbox.put(_STOP)
-        self._thread.join(timeout)
 
     # --------------------------------------------------- Backend protocol
     def can_run(self, op) -> bool:
@@ -279,21 +267,27 @@ class DeviceBackend:
         from repro.query.dispatch import collect_microbatch
         while True:
             first = self.inbox.get()
-            if first is _STOP:
+            if first is OFFLOAD_STOP:
+                self._drain_after_stop()
                 return
             group, stop = collect_microbatch(
                 self.inbox, first, size=self.batch_size,
-                max_wait_s=self.max_wait_s, clock=self._clock, stop=_STOP)
-            # partition: one device call covers one (op, shape, dtype)
-            by_key: dict = {}
-            for ent in group:
-                arr = np.asarray(ent.data)
-                key = (ent.current_op(), arr.shape, str(arr.dtype))
-                by_key.setdefault(key, []).append(ent)
-            for (op, _shape, _dtype), ents in by_key.items():
-                self._run_partition(op, ents)
+                max_wait_s=self.max_wait_s, clock=self._clock,
+                stop=OFFLOAD_STOP)
+            self._run_groups(group)
             if stop:
+                self._drain_after_stop()
                 return
+
+    def _run_groups(self, group):
+        # partition: one device call covers one (op, shape, dtype)
+        by_key: dict = {}
+        for ent in group:
+            arr = np.asarray(ent.data)
+            key = (ent.current_op(), arr.shape, str(arr.dtype))
+            by_key.setdefault(key, []).append(ent)
+        for (op, _shape, _dtype), ents in by_key.items():
+            self._run_partition(op, ents)
 
     def _run_partition(self, op, ents):
         live = []

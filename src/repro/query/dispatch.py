@@ -120,6 +120,79 @@ def collect_microbatch(inbox, first, *, size: int, max_wait_s: float,
     return group, False
 
 
+OFFLOAD_STOP = object()   # shared poison pill for offload-backend inboxes
+
+
+class OffloadInboxMixin:
+    """Inbox lifecycle shared by the offload backends
+    (``UDFBatcherBackend``, ``DeviceBackend``): a locked submit gate so
+    no entity can land in the inbox after shutdown's close (a bare
+    closed-check-then-put races the final drain sweep — a submitter
+    descheduled between check and put would strand its entity in a dead
+    inbox), the poison-pill-then-drain shutdown, and the post-join
+    sweep.  Subclasses call :meth:`_init_inbox` in ``__init__``,
+    provide ``name`` and ``_run_groups(entities)``, and their worker
+    loops treat ``OFFLOAD_STOP`` as the pill, calling
+    :meth:`_drain_after_stop` when they see it."""
+
+    def _init_inbox(self) -> None:
+        self.inbox: queue.Queue = queue.Queue()
+        self._thread: Optional[threading.Thread] = None
+        self._closed = threading.Event()
+        self._submit_gate = threading.Lock()
+
+    def submit(self, entity) -> None:
+        """Thread_3 hands an entity whose current op is routed here.
+        Raises ``RuntimeError`` once shutdown has begun — a late
+        enqueue must fail loudly (the event loop converts it into a
+        per-entity failure), never sit silently in a dead inbox."""
+        with self._submit_gate:
+            if self._closed.is_set():
+                raise RuntimeError(f"{self.name} backend is shut down")
+            self.inbox.put(entity)
+
+    def pending(self) -> int:
+        return self.inbox.qsize()
+
+    def shutdown(self, timeout: float = 5.0) -> None:
+        """Poison-pill-then-drain shutdown: mark the backend closed
+        under the submit gate (so the close is atomic with any
+        in-progress put and late ``submit`` raises), queue the pill,
+        and join.  The worker finishes its current micro-batch, then
+        drains and *executes* everything accepted before the close —
+        work already admitted is never silently dropped, so
+        ``engine.shutdown()`` stays deterministic with sessions still
+        in flight.  Idempotent."""
+        with self._submit_gate:
+            first_close = not self._closed.is_set()
+            self._closed.set()
+        if self._thread is None:
+            return
+        if first_close:
+            self.inbox.put(OFFLOAD_STOP)
+        self._thread.join(timeout)
+        if not self._thread.is_alive():
+            # the worker is joined, so this final sweep on the caller's
+            # thread is race-free (and a repeat shutdown re-sweeps
+            # harmlessly: the inbox is empty)
+            self._drain_after_stop()
+
+    def _drain_after_stop(self) -> None:
+        """Execute entities still queued around the poison pill — work
+        accepted before the close is never silently dropped (cancelled
+        sessions' members are discarded in O(1) by the batch runner)."""
+        leftover = []
+        while True:
+            try:
+                nxt = self.inbox.get_nowait()
+            except queue.Empty:
+                break
+            if nxt is not OFFLOAD_STOP:
+                leftover.append(nxt)
+        if leftover:
+            self._run_groups(leftover)
+
+
 class OpCostTracker:
     """EWMA of observed per-op execution seconds, keyed by canonical op
     signature.  ``kind="native"`` samples come from the native workers
@@ -168,6 +241,17 @@ class OpCostTracker:
     def known(self, op, kind: str = "native") -> bool:
         with self._lock:
             return op_signature(op) in self._est[kind]
+
+    def mean_estimate(self, kind: str = "native") -> float | None:
+        """Mean of the calibrated per-op estimates — the admission
+        controller's per-entity service-time fallback when no
+        completion-rate sample exists yet.  None when nothing has been
+        observed."""
+        with self._lock:
+            table = self._est[kind]
+            if not table:
+                return None
+            return sum(table.values()) / len(table)
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -276,9 +360,9 @@ class NativeBackend(Backend):
         now = time.monotonic()
         if now - at < self.util_window_s / 4.0:
             return val
-        w = self.util_window_s
-        busy = self.loop.t2_meter.busy_seconds(since=now - w)
-        val = min(1.0, busy / (w * max(1, self.loop.num_native_workers)))
+        val = self.loop.t2_meter.utilization(
+            workers=self.loop.num_native_workers,
+            window_s=self.util_window_s)
         self._util_cache = (val, now)
         return val
 

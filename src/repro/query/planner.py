@@ -105,6 +105,30 @@ class QueryPlanner:
             self.result_cache.invalidate(eid)
         return eid
 
+    # ---------------------------------------------------------- admission
+    def estimate_fanout(self, cplans: list[CommandPlan]) -> int:
+        """*Capacity-consuming* entity fan-out one phase would produce,
+        without expanding it: the metadata match count per Find
+        (limit-capped) and one entity per Add — crucially without the
+        Add's ingest side effects, so admission control can shed a
+        query before its barrier writes anything.  Commands with no
+        operations contribute zero: their entities are born ``done()``
+        (a metadata/blob lookup, or a plain ingest) and never occupy an
+        in-flight slot, so shedding on their match count would reject
+        queries that cost the engine nothing.  Only consulted off the
+        uncontended hot path (saturation, or an Add barrier)."""
+        n = 0
+        for cp in cplans:
+            cmd = cp.command
+            if not cmd.operations:
+                continue
+            if cmd.verb == "add":
+                n += 1
+            else:
+                eids = self.meta.find(cmd.kind, cmd.constraints)
+                n += len(eids[:cmd.limit]) if cmd.limit else len(eids)
+        return n
+
     # ------------------------------------------------------------ expand
     def expand(self, cplan: CommandPlan, query_id: str,
                use_cache: bool = True) -> list[Entity]:

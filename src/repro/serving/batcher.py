@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.distributed.sharding import ShardingCtx
 from repro.models.registry import ModelAPI
+from repro.query.dispatch import OFFLOAD_STOP, OffloadInboxMixin
 from repro.serving.serve_step import sample_token
 
 
@@ -163,12 +164,12 @@ class GroupBatcher:
         self.groups_run += 1
 
 
-_STOP = object()
-
-
-class UDFBatcherBackend:
+class UDFBatcherBackend(OffloadInboxMixin):
     """Grouped-UDF execution as a dispatch backend (``Backend`` protocol
-    from repro.query.dispatch).
+    from repro.query.dispatch).  Inbox lifecycle — the gated ``submit``,
+    poison-pill ``shutdown``, post-join drain — comes from
+    :class:`repro.query.dispatch.OffloadInboxMixin`, shared with the
+    device backend.
 
     One worker thread pulls entities off an inbox, collects a group (up
     to ``group_size``, held at most ``max_wait_s`` from the first
@@ -195,10 +196,9 @@ class UDFBatcherBackend:
         self.tracker = tracker or OpCostTracker()
         self._clock = clock
         self.ledger = LoadLedger(lambda: 1.0, clock=clock)
-        self.inbox: queue.Queue = queue.Queue()
+        self._init_inbox()
         self._reply_to: Optional[queue.Queue] = None
         self._is_cancelled = lambda qid: False
-        self._thread: Optional[threading.Thread] = None
         self.groups_run = 0
         self.entities_run = 0
         self.errors = 0
@@ -214,19 +214,6 @@ class UDFBatcherBackend:
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="udf-batcher-backend")
         self._thread.start()
-
-    def submit(self, entity) -> None:
-        """Thread_3 hands an entity whose current op is routed here."""
-        self.inbox.put(entity)
-
-    def pending(self) -> int:
-        return self.inbox.qsize()
-
-    def shutdown(self, timeout: float = 5.0) -> None:
-        if self._thread is None:
-            return
-        self.inbox.put(_STOP)
-        self._thread.join(timeout)
 
     # --------------------------------------------------- Backend protocol
     def can_run(self, op) -> bool:
@@ -264,20 +251,26 @@ class UDFBatcherBackend:
         from repro.query.dispatch import collect_microbatch
         while True:
             first = self.inbox.get()
-            if first is _STOP:
+            if first is OFFLOAD_STOP:
+                self._drain_after_stop()
                 return
             group, stop = collect_microbatch(
                 self.inbox, first, size=self.group_size,
-                max_wait_s=self.max_wait_s, clock=self._clock, stop=_STOP)
-            # partition by op: entities collected in one window may carry
-            # different ops; only same-op entities share a batched call
-            by_op: dict = {}
-            for ent in group:
-                by_op.setdefault(ent.current_op(), []).append(ent)
-            for op, ents in by_op.items():
-                self._run_batch(op, ents)
+                max_wait_s=self.max_wait_s, clock=self._clock,
+                stop=OFFLOAD_STOP)
+            self._run_groups(group)
             if stop:
+                self._drain_after_stop()
                 return
+
+    def _run_groups(self, group):
+        # partition by op: entities collected in one window may carry
+        # different ops; only same-op entities share a batched call
+        by_op: dict = {}
+        for ent in group:
+            by_op.setdefault(ent.current_op(), []).append(ent)
+        for op, ents in by_op.items():
+            self._run_batch(op, ents)
 
     def _run_batch(self, op, ents):
         live = []

@@ -1,0 +1,627 @@
+"""Admission control: bounded in-flight entities, shed/queue policies,
+priority ordering, cancellation of pending admissions, the overload
+chaos storm across all four backends, and the shutdown-determinism /
+fair-queue-accounting / snapshot-ordering bugfixes that ride along."""
+import queue
+import threading
+import time
+from concurrent.futures import CancelledError
+
+import numpy as np
+import pytest
+
+from repro.core.engine import VDMSAsyncEngine
+from repro.core.entity import ERD, Entity
+from repro.core.event_loop import EventLoop, FairQueue
+from repro.core.pipeline import make_op
+from repro.core.remote import TransportModel
+from repro.core.result_cache import ResultCache, prefix_signatures
+from repro.core.udf import register_batched_udf, register_udf
+from repro.query.admission import AdmissionController, OverloadError
+
+FAST = TransportModel(network_latency_s=0.001, service_time_s=0.002)
+SLOW = TransportModel(network_latency_s=0.001, service_time_s=0.05)
+
+REMOTE_PIPE = [
+    {"type": "resize", "width": 16, "height": 16},
+    {"type": "remote", "url": "u", "options": {"id": "grayscale"}},
+    {"type": "threshold", "value": 0.4},
+]
+
+register_udf("adm_scale", lambda img, k=2.0: np.asarray(img) * k)
+register_batched_udf(
+    "adm_scale", lambda imgs, k=2.0: [np.asarray(i) * k for i in imgs])
+
+
+def _mk_engine(**kw):
+    kw.setdefault("num_remote_servers", 2)
+    kw.setdefault("transport", FAST)
+    return VDMSAsyncEngine(**kw)
+
+
+def _add_images(eng, n=6, size=24, category="adm"):
+    rng = np.random.default_rng(7)
+    ids = []
+    for i in range(n):
+        img = rng.uniform(0, 1, (size, size, 3)).astype(np.float32)
+        ids.append(eng.add_entity("image", img,
+                                  {"category": category, "idx": i}))
+    return ids
+
+
+def _find(category="adm", ops=REMOTE_PIPE):
+    return [{"FindImage": {"constraints": {"category": ["==", category]},
+                           "operations": ops}}]
+
+
+def _wait(pred, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while not pred():
+        if time.monotonic() > deadline:
+            return False
+        time.sleep(0.005)
+    return True
+
+
+# ------------------------------------------------------- knob validation
+def test_admission_knob_validation_leaks_no_threads():
+    before = threading.active_count()
+    with pytest.raises(ValueError, match="admission must be"):
+        _mk_engine(admission="drop")
+    with pytest.raises(ValueError, match="max_inflight_entities requires"):
+        _mk_engine(max_inflight_entities=8)
+    with pytest.raises(ValueError, match="max_inflight_entities must be"):
+        _mk_engine(admission="shed")
+    with pytest.raises(ValueError, match="admission_queue_cap"):
+        _mk_engine(admission="queue", max_inflight_entities=8,
+                   admission_queue_cap=-1)
+    assert threading.active_count() == before
+
+
+def test_default_engine_has_no_controller_and_ignores_priority():
+    eng = _mk_engine()
+    try:
+        assert eng.admission_ctl is None
+        assert eng.admission_stats() == {"policy": "none"}
+        _add_images(eng, 4)
+        ref = eng.execute(_find(), timeout=60)
+        fut = eng.submit(_find(), priority=99)   # accepted, harmless
+        res = fut.result(60)
+        assert list(res["entities"]) == list(ref["entities"])
+        for eid in ref["entities"]:
+            np.testing.assert_array_equal(np.asarray(res["entities"][eid]),
+                                          np.asarray(ref["entities"][eid]))
+    finally:
+        eng.shutdown()
+
+
+def test_admission_queue_response_identical_to_unbounded():
+    def run(**kw):
+        eng = _mk_engine(**kw)
+        try:
+            _add_images(eng, 6)
+            return eng.execute(_find(), timeout=60)
+        finally:
+            eng.shutdown()
+
+    ref = run()
+    out = run(admission="queue", max_inflight_entities=2)
+    assert list(ref["entities"]) == list(out["entities"])
+    for eid in ref["entities"]:
+        np.testing.assert_array_equal(np.asarray(ref["entities"][eid]),
+                                      np.asarray(out["entities"][eid]))
+    assert ref["stats"]["matched"] == out["stats"]["matched"]
+    assert ref["stats"]["failed"] == out["stats"]["failed"] == 0
+
+
+# ------------------------------------------------------------ shed policy
+def test_shed_rejects_fast_with_retry_after_and_recovers():
+    eng = _mk_engine(transport=SLOW, admission="shed",
+                     max_inflight_entities=4)
+    try:
+        _add_images(eng, 4)
+        f1 = eng.submit(_find())
+        with pytest.raises(OverloadError) as ei:
+            eng.submit(_find())
+        assert ei.value.retry_after_s > 0
+        # the typed error carries the load-score snapshot at rejection
+        assert ei.value.load.get("score", 0) > 0
+        assert "inflight_frac" in ei.value.load
+        assert eng.admission_stats()["shed"] >= 1
+        assert f1.result(60)["stats"]["failed"] == 0
+        # capacity freed: the same query is admitted again
+        assert eng.submit(_find()).result(60)["stats"]["failed"] == 0
+        st = eng.admission_stats()
+        assert st["inflight"] == 0 and st["pending"] == 0
+        assert st["peak_inflight"] <= 4
+    finally:
+        eng.shutdown()
+
+
+def test_shed_rejects_before_add_ingest_side_effects():
+    eng = _mk_engine(transport=SLOW, admission="shed",
+                     max_inflight_entities=2)
+    try:
+        _add_images(eng, 2)
+        blocker = eng.submit(_find())
+        assert _wait(lambda: eng.admission_stats()["inflight"] > 0)
+        img = np.zeros((8, 8, 3), np.float32)
+        with pytest.raises(OverloadError):
+            eng.submit([{"AddImage": {
+                "properties": {"category": "shed-add"}, "data": img,
+                "operations": [{"type": "grayscale"}]}}])
+        # the shed Add must NOT have ingested its entity
+        assert eng.meta.find("image", {"category": ["==", "shed-add"]}) == []
+        blocker.result(60)
+    finally:
+        eng.shutdown()
+
+
+def test_saturated_shed_engine_still_serves_full_cache_hits():
+    """A query the result cache can serve end-to-end consumes no
+    capacity, so a saturated shed engine must not reject it on its raw
+    match count."""
+    eng = _mk_engine(transport=SLOW, admission="shed",
+                     max_inflight_entities=2, cache_capacity=32)
+    try:
+        _add_images(eng, 2)
+        _add_images(eng, 2, category="cached")
+        warm = eng.execute(_find(category="cached"), timeout=60)
+        assert warm["stats"]["failed"] == 0
+        blocker = eng.submit(_find())
+        assert _wait(lambda: eng.admission_stats()["inflight"] == 2)
+        res = eng.submit(_find(category="cached")).result(10)
+        assert res["stats"]["failed"] == 0
+        assert res["stats"]["cache_full_hits"] == 2
+        blocker.result(60)
+    finally:
+        eng.shutdown()
+
+
+# ----------------------------------------------------------- queue policy
+def test_queue_policy_bounds_inflight_and_drains_by_priority():
+    eng = _mk_engine(transport=SLOW, admission="queue",
+                     max_inflight_entities=1)
+    try:
+        _add_images(eng, 1)
+        for cat in ("p0", "p1", "p5"):
+            _add_images(eng, 1, category=cat)
+        blocker = eng.submit(_find())
+        assert _wait(lambda: eng.admission_stats()["inflight"] == 1)
+        order = []
+        lock = threading.Lock()
+
+        def _done(name):
+            def cb(fut):
+                with lock:
+                    order.append(name)
+            return cb
+
+        # submitted lowest-priority first: drain order must follow
+        # priority (higher first), not submission order
+        futs = {}
+        for name, pri in (("p0", 0), ("p1", 1), ("p5", 5)):
+            futs[name] = eng.submit(_find(category=name), priority=pri)
+            futs[name].add_done_callback(_done(name))
+        assert eng.admission_stats()["pending"] == 3
+        blocker.result(60)
+        for f in futs.values():
+            assert f.result(60)["stats"]["failed"] == 0
+        assert order == ["p5", "p1", "p0"]
+        st = eng.admission_stats()
+        assert st["peak_inflight"] <= 1
+        assert st["pending"] == 0 and st["inflight"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_queue_cap_overflow_sheds():
+    eng = _mk_engine(transport=SLOW, admission="queue",
+                     max_inflight_entities=1, admission_queue_cap=1)
+    try:
+        _add_images(eng, 1)
+        blocker = eng.submit(_find())
+        assert _wait(lambda: eng.admission_stats()["inflight"] == 1)
+        queued = eng.submit(_find())          # fills the pending lane
+        with pytest.raises(OverloadError, match="queue full"):
+            eng.submit(_find())
+        blocker.result(60)
+        assert queued.result(60)["stats"]["failed"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_cancelling_queued_query_drops_pending_admissions():
+    eng = _mk_engine(transport=SLOW, admission="queue",
+                     max_inflight_entities=1)
+    try:
+        _add_images(eng, 1)
+        blocker = eng.submit(_find())
+        assert _wait(lambda: eng.admission_stats()["inflight"] == 1)
+        parked = eng.submit(_find())
+        assert eng.admission_stats()["pending"] == 1
+        assert parked.cancel()
+        assert eng.admission_stats()["pending"] == 0
+        with pytest.raises(CancelledError):
+            parked.result(5)
+        assert blocker.result(60)["stats"]["failed"] == 0
+        st = eng.admission_stats()
+        assert st["inflight"] == 0 and st["dropped"] >= 1
+    finally:
+        eng.shutdown()
+
+
+# --------------------------------------------- the 10x overload chaos storm
+def _storm(policy, n_entities=4, max_inflight=8, clients=20):
+    """Hammer submit() at ~10x capacity across all four backends with
+    random cancels.  Returns (engine stats snapshot closure results)."""
+    import random
+
+    pipe = [
+        {"type": "resize", "width": 16, "height": 16},
+        {"type": "remote", "url": "u", "options": {"id": "grayscale"}},
+        {"type": "udf", "options": {"id": "adm_scale", "k": 2.0}},
+        {"type": "blur", "ksize": 3, "sigma_x": 1.0},
+        {"type": "threshold", "value": 0.4},
+    ]
+    eng = _mk_engine(
+        dispatch="cost", num_native_workers=2, device_backend=True,
+        transport=TransportModel(network_latency_s=0.001,
+                                 service_time_s=0.01),
+        cache_capacity=64, coalesce_window_ms=2.0,
+        cost_overrides={
+            "grayscale": {"remote": 1e-6, "native": 10.0,
+                          "batcher": 10.0, "device": 10.0},
+            "adm_scale": {"batcher": 1e-6, "native": 10.0,
+                          "remote": 10.0, "device": 10.0},
+            "blur": {"device": 1e-6, "native": 10.0,
+                     "remote": 10.0, "batcher": 10.0},
+        },
+        admission=policy, max_inflight_entities=max_inflight,
+        admission_queue_cap=10_000)
+    try:
+        _add_images(eng, n_entities)
+        # warmup populates jit caches; cache=False keeps the storm honest
+        eng.execute(_find(), timeout=120)
+        rng = random.Random(0xADA)
+        outcomes = []
+        violations = []
+        lock = threading.Lock()
+        stop_sampling = threading.Event()
+
+        def sampler():
+            while not stop_sampling.is_set():
+                st = eng.admission_stats()
+                if st["inflight"] > max_inflight:
+                    violations.append(st["inflight"])
+                time.sleep(0.001)
+
+        def client(cid):
+            try:
+                fut = eng.submit(_find(), cache=False,
+                                 priority=rng.randrange(3))
+            except OverloadError as e:
+                with lock:
+                    outcomes.append(("shed", e))
+                return
+            if rng.random() < 0.25:
+                time.sleep(rng.random() * 0.02)
+                fut.cancel()
+                with lock:
+                    outcomes.append(("cancel", fut))
+                return
+            try:
+                res = fut.result(timeout=120)
+                with lock:
+                    outcomes.append(("done", res))
+            except CancelledError:
+                with lock:
+                    outcomes.append(("cancel", fut))
+
+        s = threading.Thread(target=sampler, daemon=True)
+        s.start()
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stop_sampling.set()
+        s.join(5)
+        assert len(outcomes) == clients
+        assert not violations, \
+            f"in-flight exceeded {max_inflight}: {violations[:5]}"
+        st = eng.admission_stats()
+        assert st["peak_inflight"] <= max_inflight, st
+        for kind, res in outcomes:
+            if kind == "done":
+                assert res["stats"]["matched"] == n_entities
+                assert res["stats"]["failed"] == 0
+                assert len(res["entities"]) == n_entities
+        # nothing leaks anywhere: remote inflight, Queue_1 lanes, both
+        # offload inboxes, the admission ledger, session objects
+        assert _wait(lambda: not eng.pool.inflight and
+                     eng.loop.queue1.qsize() == 0 and
+                     eng.batcher_backend.pending() == 0 and
+                     eng.device_backend.pending() == 0 and
+                     eng.active_sessions() == 0, timeout=20), \
+            "storm leaked work"
+        assert _wait(lambda: eng.admission_stats()["inflight"] == 0 and
+                     eng.admission_stats()["pending"] == 0, timeout=10)
+        # engine still healthy after the storm
+        res = eng.execute(_find(), timeout=120)
+        assert res["stats"]["failed"] == 0
+        return outcomes, eng.admission_stats()
+    finally:
+        eng.shutdown()
+
+
+def test_overload_storm_queue_policy_bounds_inflight():
+    outcomes, st = _storm("queue")
+    assert st["queued"] > 0
+    assert not any(kind == "shed" for kind, _ in outcomes)
+    assert any(kind == "done" for kind, _ in outcomes)
+
+
+def test_overload_storm_shed_policy_bounds_inflight_and_sheds():
+    outcomes, st = _storm("shed")
+    # at 10x offered load some queries must be rejected, and the
+    # rejections must be the typed error with a retry estimate
+    sheds = [e for kind, e in outcomes if kind == "shed"]
+    assert sheds, "10x storm shed nothing"
+    assert all(e.retry_after_s > 0 for e in sheds)
+    assert any(kind == "done" for kind, _ in outcomes)
+
+
+# ------------------------------------------- satellite: shutdown semantics
+def test_shutdown_with_inflight_sessions_is_deterministic():
+    eng = _mk_engine(transport=SLOW, num_remote_servers=2)
+    try:
+        _add_images(eng, 8)
+        futs = [eng.submit(_find()) for _ in range(4)]
+        t0 = time.monotonic()
+    finally:
+        eng.shutdown()
+    assert time.monotonic() - t0 < 30
+    for f in futs:
+        assert f.done()
+        with pytest.raises(CancelledError):
+            f.result(1)
+    with pytest.raises(RuntimeError, match="shut down"):
+        eng.submit(_find())
+    eng.shutdown()   # idempotent
+
+
+def test_offload_backend_rejects_late_submit_and_drains_accepted_work():
+    from repro.serving.batcher import UDFBatcherBackend
+
+    replies: queue.Queue = queue.Queue()
+    be = UDFBatcherBackend(group_size=4, max_wait_s=0.01)
+    be.bind(replies, lambda qid: False)
+    op = make_op("adm_scale", {"k": 2.0}, where="udf")
+    ents = [Entity(eid=f"e{i}", kind="image",
+                   data=np.full((2, 2, 3), float(i), np.float32),
+                   ops=[op], query_id="q") for i in range(3)]
+    for e in ents:
+        be.submit(e)
+    # shutdown queues the poison pill then DRAINS: the three entities
+    # accepted before the close are executed, never silently dropped
+    be.shutdown()
+    got = {}
+    while len(got) < 3:
+        kind, ent, res, err = replies.get(timeout=5)
+        assert kind == "batched" and err is None
+        got[ent.eid] = res
+    for i, e in enumerate(ents):
+        np.testing.assert_allclose(got[e.eid],
+                                   np.asarray(e.data) * 0 + 2.0 * i)
+    # late work is refused loudly
+    with pytest.raises(RuntimeError, match="shut down"):
+        be.submit(ents[0])
+
+
+def test_device_backend_rejects_late_submit_after_shutdown():
+    from repro.query.device_backend import DeviceBackend
+
+    replies: queue.Queue = queue.Queue()
+    be = DeviceBackend(batch_size=2, max_wait_s=0.01, calibrate=False)
+    be.bind(replies, lambda qid: False)
+    op = make_op("grayscale", {})
+    ent = Entity(eid="d0", kind="image",
+                 data=np.ones((4, 4, 3), np.float32), ops=[op],
+                 query_id="q")
+    be.submit(ent)
+    be.shutdown()
+    kind, got, res, err = replies.get(timeout=5)
+    assert kind == "device" and err is None and got.eid == "d0"
+    with pytest.raises(RuntimeError, match="shut down"):
+        be.submit(ent)
+
+
+# ------------------------------------- satellite: fair-queue lane accounting
+def test_fair_queue_lane_counts_stay_consistent_under_discard_race():
+    q = FairQueue(fair=True)
+    qids = [f"q{i}" for i in range(6)]
+    stop = threading.Event()
+    popped = []
+
+    def producer():
+        i = 0
+        while not stop.is_set():
+            qid = qids[i % len(qids)]
+            q.put(Entity(eid=f"{qid}-{i}", kind="image", data=None,
+                         ops=[], query_id=qid))
+            i += 1
+
+    def consumer():
+        while not stop.is_set():
+            ent = q.get(timeout=0.01)
+            if ent is not None:
+                popped.append(ent.eid)
+
+    def discarder():
+        import random
+        rng = random.Random(5)
+        while not stop.is_set():
+            q.discard(rng.choice(qids))
+            time.sleep(0.0005)
+
+    threads = ([threading.Thread(target=producer)]
+               + [threading.Thread(target=consumer) for _ in range(3)]
+               + [threading.Thread(target=discarder) for _ in range(2)])
+    for t in threads:
+        t.start()
+    time.sleep(0.5)
+    stop.set()
+    for t in threads:
+        t.join(5)
+    # counters must agree exactly with the lanes they describe — the
+    # accounting is taken inside the same critical section as the pop,
+    # so no interleaving of get/discard can skew it
+    depths = q.depths()
+    with q._cv:
+        lanes = {qid: len(lane) for qid, lane in q._lanes.items()}
+    assert depths == {k: v for k, v in lanes.items() if v > 0}
+    assert sum(depths.values()) == q.qsize()
+    # and a query arriving after the storm is not starved
+    q.put(Entity(eid="late", kind="image", data=None, ops=[],
+                 query_id="late-query"))
+    seen = set()
+    for _ in range(q.qsize()):
+        ent = q.get(timeout=1.0)
+        assert ent is not None
+        seen.add(ent.eid)
+        if ent.eid == "late":
+            break
+    assert "late" in seen
+
+
+# --------------------------- satellite: snapshots recorded before callbacks
+def test_batched_fanout_records_all_snapshots_despite_raising_callback():
+    """A client callback that raises while a coalesced batch fans out
+    must not skip the cache snapshots — or the completions — of the
+    remaining members of the same group."""
+
+    class _StubPool:
+        def handle_response(self, tag, req, payload):
+            return ("done", payload)
+
+        def reissue_stragglers(self):
+            pass
+
+    rc = ResultCache(capacity=16)
+    raised = []
+
+    def boom(ent):
+        raised.append(ent.eid)
+        raise RuntimeError("client callback exploded")
+
+    loop = EventLoop(_StubPool(), ERD(), num_native_workers=1,
+                     on_entity_done=boom, result_cache=rc)
+    try:
+        op = make_op("grayscale", {}, where="remote")
+        sigs = prefix_signatures([op])
+        ents = []
+        for i in range(4):
+            e = Entity(eid=f"c{i}", kind="image",
+                       data=np.ones((2, 2, 3), np.float32), ops=[op],
+                       query_id="q", cacheable=True)
+            e.cache_sigs = sigs
+            ents.append(e)
+
+        class _Req:
+            entity = ents
+
+        results = [np.full((2, 2), 0.5, np.float32) for _ in ents]
+        # must not raise out of the handler (it runs on Thread_3)
+        loop._handle_response("ok", _Req(), results)
+        assert raised == [e.eid for e in ents]   # every member completed
+        for e in ents:
+            k, cached = rc.longest_prefix(e.eid, sigs)
+            assert k == 1, f"snapshot skipped for {e.eid}"
+            np.testing.assert_array_equal(cached, results[0])
+    finally:
+        loop.shutdown()
+
+
+# ------------------------------------- review-sweep regression coverage
+def test_reserve_claims_capacity_atomically_before_ingest():
+    """Two queries racing the same last slots must not both pass a
+    check-only gate: reserve() claims the capacity, so the loser is
+    rejected BEFORE its Add barrier could ingest."""
+    ctl = AdmissionController(max_inflight=2, policy="shed")
+
+    class _E:
+        def __init__(self, qid):
+            self.query_id = qid
+
+    ctl.reserve("a", 2, first_phase=True)
+    assert ctl.stats()["reserved"] == 2
+    # the slots are spoken for: a second pre-ingest claim sheds now
+    with pytest.raises(OverloadError):
+        ctl.reserve("b", 1, first_phase=True)
+    # ... and so does a plain post-expand admission
+    with pytest.raises(OverloadError):
+        ctl.admit_phase("c", [_E("c")], 0, first_phase=True)
+    # the reserving query consumes its claim without re-deciding
+    admitted = ctl.admit_phase("a", [_E("a"), _E("a")], 0,
+                               first_phase=True)
+    assert len(admitted) == 2
+    st = ctl.stats()
+    assert st["inflight"] == 2 and st["reserved"] == 0
+    assert st["peak_inflight"] <= 2
+    # drop releases reserved capacity too
+    ctl.reserve("d", 0, first_phase=True)   # no-op claim
+    ctl.drop_query("a")
+    ctl.reserve("e", 2, first_phase=True)
+    ctl.drop_query("e")
+    assert ctl.stats()["reserved"] == 0 and ctl.inflight() == 0
+
+
+def test_cancel_racing_admission_never_leaks_inflight_slots():
+    """A launch whose admission lands after the cancel's drop_query
+    must release the re-admitted slots (workers skip cancelled entities
+    without a completion callback, so a leak here pins the cap)."""
+    eng = _mk_engine(transport=SLOW, admission="shed",
+                     max_inflight_entities=4)
+    try:
+        _add_images(eng, 2)
+        fut = eng.submit(_find())
+        qid = fut._session.qid
+        assert fut.cancel()
+        assert _wait(lambda: eng.admission_stats()["inflight"] == 0)
+        # replay the racy interleaving: drop_query already ran (cancel
+        # above); now the stale phase launch arrives
+        op = make_op("grayscale", {}, where="native")
+        stale = [Entity(eid=f"s{i}", kind="image",
+                        data=np.ones((4, 4, 3), np.float32), ops=[op],
+                        query_id=qid) for i in range(3)]
+        eng._launch(stale, priority=0, first_phase=True)
+        st = eng.admission_stats()
+        assert st["inflight"] == 0 and st["pending"] == 0, st
+        # capacity intact: a fresh query still fits
+        assert eng.submit(_find()).result(60)["stats"]["failed"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_store_write_back_failure_fails_entity_not_hangs_session():
+    """An Add write-back raise used to strand the session: _pending was
+    never decremented and the worker's redelivery re-raised forever."""
+    eng = _mk_engine(transport=FAST)
+    try:
+        def boom(ent):
+            raise IOError("blob store full")
+        eng._store_result = boom
+        img = np.zeros((8, 8, 3), np.float32)
+        seen = []
+        fut = eng.submit([{"AddImage": {
+            "properties": {"category": "wb-fail"}, "data": img,
+            "operations": [{"type": "grayscale"}]}}],
+            on_entity=seen.append)
+        res = fut.result(30)   # completes — no hang
+        assert len(res["entities"]) == 1
+        (ent,) = seen          # streamed after the failed write-back
+        assert "store write-back failed" in ent.failed
+    finally:
+        eng.shutdown()

@@ -451,6 +451,10 @@ def test_native_backend_estimate_grows_with_projected_load():
             def busy_seconds(since=0.0):
                 return 0.0
 
+            @staticmethod
+            def utilization(*, workers, window_s=0.25):
+                return 0.0
+
         class queue1:
             @staticmethod
             def qsize():
