@@ -42,7 +42,20 @@ every push):
   bytes: fused batched execution may differ from eager per-entity
   execution in the last ulp, which is expected float behavior — the
   byte-exact tripwire below covers the paper-faithful path, which never
-  touches the device.
+  touches the device.  ``max_abs_err`` records the per-dtype worst-case
+  deviation behind the allclose verdict (so a drifting kernel shows a
+  number, not just a flipped boolean).
+
+- ``dispatch_device_fused``: the segment-fusion arm — a 4-op pipeline of
+  device-capable ops (resize → crop → normalize → blur; the first three
+  hit the registered fused-preprocessing chain kernel) pinned entirely
+  onto the device, run with ``device_fuse_segments=False`` (per-op: one
+  transfer + one jit dispatch + one event-loop round trip PER OP) vs the
+  fused default (the whole segment as ONE jit program: one transfer each
+  way, resident intermediates).  ``derived`` is
+  ``device_fused_speedup_vs_unfused = t_unfused / t_fused``; the two
+  responses must be allclose (``responses_close``, enforced under
+  ``--check-baseline``) and per-dtype ``max_abs_err`` rides along.
 
 - ``dispatch_static_hash``: a bit-exact workload (index-permutation +
   comparison ops only, so the hash is stable across platforms and jax
@@ -122,6 +135,26 @@ def _entities_equal(a: dict, b: dict) -> bool:
     if list(a) != list(b):
         return False
     return all(np.array_equal(np.asarray(a[k]), np.asarray(b[k])) for k in a)
+
+
+def _compare_close(a: dict, b: dict) -> tuple:
+    """(allclose verdict, per-dtype max-abs-error) across two response
+    entity dicts — the number behind the boolean, so a kernel drifting
+    toward the tolerance edge is visible in the bench artifact."""
+    if list(a) != list(b):
+        return False, {}
+    close = True
+    max_err: dict[str, float] = {}
+    for k in a:
+        x, y = np.asarray(a[k]), np.asarray(b[k])
+        if x.shape != y.shape:
+            return False, max_err
+        err = float(np.max(np.abs(x.astype(np.float64)
+                                  - y.astype(np.float64)))) if x.size else 0.0
+        dt = str(x.dtype)
+        max_err[dt] = max(max_err.get(dt, 0.0), err)
+        close = close and np.allclose(x, y, rtol=1e-5, atol=1e-6)
+    return close, max_err
 
 
 # ------------------------------------------------------- mixed workload
@@ -246,11 +279,7 @@ def run_device(n_images=16, size=72, ksize=9):
 
     t_native, ents_native, _ = arm("native")
     t_device, ents_device, stats_dev = arm("device")
-    close = (list(ents_native) == list(ents_device)
-             and all(np.allclose(np.asarray(ents_native[k]),
-                                 np.asarray(ents_device[k]),
-                                 rtol=1e-5, atol=1e-6)
-                     for k in ents_native))
+    close, max_err = _compare_close(ents_native, ents_device)
     identical = _entities_equal(ents_native, ents_device)
     dev = stats_dev.get("device", {})
     return [{
@@ -267,7 +296,87 @@ def run_device(n_images=16, size=72, ksize=9):
         "device_platform": dev.get("platform", "?"),
         "device_calibrated": dev.get("calibrated", False),
         "responses_close": close,
+        # responses_identical is usually false here — fused batched
+        # execution vs eager per-entity differs in the last ulp; the
+        # per-dtype worst-case deviation quantifies by HOW much
         "responses_identical": identical,
+        "max_abs_err": max_err,
+    }]
+
+
+# ---------------------------------------------------- fused-segment arm
+def run_device_fused(n_images=16, size=72, ksize=9):
+    """Per-op device execution vs fused-segment execution on a 4-op
+    all-device pipeline (resize → crop → normalize → blur — the first
+    three collapse into the fused preprocessing kernel inside the
+    segment program).  Identical engines except ``device_fuse_segments``;
+    the speedup isolates what fusing the segment buys: one transfer each
+    way and one event-loop round trip instead of four of each."""
+    from repro.core.engine import VDMSAsyncEngine
+    from repro.core.remote import TransportModel
+
+    transport = TransportModel(network_latency_s=0.002,
+                               service_time_s=0.001)
+    pipe = [
+        {"type": "resize", "width": 64, "height": 64},
+        {"type": "crop", "x": 8, "y": 8, "width": 48, "height": 48},
+        {"type": "normalize", "mean": 0.45, "std": 0.22},
+        {"type": "blur", "ksize": ksize, "sigma_x": 2.0},
+    ]
+    query = [{"FindImage": {"constraints": {"category": ["==", "dsp"]},
+                            "operations": pipe}}]
+    warm_q = [{"FindImage": {"constraints": {"category": ["==", "warm"]},
+                             "operations": pipe}}]
+    pinned = {o["type"]: {"device": 1e-6, "native": 10.0,
+                          "remote": 10.0, "batcher": 10.0}
+              for o in pipe}
+
+    def arm(fuse):
+        eng = VDMSAsyncEngine(
+            num_remote_servers=2, transport=transport,
+            num_native_workers=2,
+            dispatch="cost", device_backend=True,
+            device_fuse_segments=fuse,
+            device_batch_size=8, device_max_wait_ms=25.0,
+            cost_overrides=pinned)
+        try:
+            _fill(eng, n_images, size)
+            # warm with a full micro-batch so the timed run reuses the
+            # compiled (segment, bucket-shape) executables in both arms
+            _fill(eng, 8, size, category="warm")
+            eng.execute(warm_q, timeout=600)
+            t0 = time.monotonic()
+            res = eng.execute(query, timeout=600)
+            dt = time.monotonic() - t0
+            assert res["stats"]["failed"] == 0, res["stats"]
+            return dt, res["entities"], eng.dispatch_stats()
+        finally:
+            eng.shutdown()
+
+    t_unfused, ents_unfused, stats_unf = arm(False)
+    t_fused, ents_fused, stats_fus = arm(True)
+    close, max_err = _compare_close(ents_unfused, ents_fused)
+    dev_f = stats_fus.get("device", {})
+    dev_u = stats_unf.get("device", {})
+    return [{
+        "name": f"dispatch_device_fused_n{n_images}",
+        "us_per_call": t_fused / n_images * 1e6,
+        "derived": t_unfused / t_fused,
+        "device_fused_speedup_vs_unfused": t_unfused / t_fused,
+        "n_images": n_images,
+        "segment_ops": len(pipe),
+        "unfused_s": t_unfused,
+        "fused_s": t_fused,
+        "entities_per_s_fused": n_images / t_fused,
+        "fused_segments": dev_f.get("fused_segments", 0),
+        "fused_groups": dev_f.get("groups_run", 0),
+        "unfused_groups": dev_u.get("groups_run", 0),
+        "fused_h2d_bytes": dev_f.get("h2d_bytes", 0),
+        "unfused_h2d_bytes": dev_u.get("h2d_bytes", 0),
+        "padding_waste_frac": dev_f.get("padding_waste_frac", 0.0),
+        "device_platform": dev_f.get("platform", "?"),
+        "responses_close": close,
+        "max_abs_err": max_err,
     }]
 
 
@@ -331,15 +440,19 @@ def run(smoke=True):
     if smoke:
         rows = (run_mixed(n_images=16, size=48, lm_steps=2)
                 + run_device(n_images=16, size=72)
+                + run_device_fused(n_images=16, size=72)
                 + run_static_hash())
     else:
         rows = (run_mixed(n_images=32, size=64, lm_steps=4)
                 + run_device(n_images=32, size=96, ksize=13)
+                + run_device_fused(n_images=32, size=96, ksize=13)
                 + run_static_hash())
     by_name = {r["name"]: r for r in rows}
     mixed = next(r for n, r in by_name.items() if n.startswith("dispatch_mixed"))
     device = next(r for n, r in by_name.items()
-                  if n.startswith("dispatch_device"))
+                  if n.startswith("dispatch_device_n"))
+    fused = next(r for n, r in by_name.items()
+                 if n.startswith("dispatch_device_fused"))
     hrow = by_name["dispatch_static_hash"]
     payload = {
         "smoke": smoke,
@@ -349,6 +462,9 @@ def run(smoke=True):
         "device_speedup_vs_native": device["derived"],
         "device_responses_close": device["responses_close"],
         "device_platform": device["device_platform"],
+        "device_fused_speedup_vs_unfused":
+            fused["device_fused_speedup_vs_unfused"],
+        "device_fused_responses_close": fused["responses_close"],
         "static_response_sha256": hrow["static_response_sha256"],
         "static_matches_baseline": hrow["static_matches_baseline"],
         "rows": rows,
@@ -403,10 +519,17 @@ def main():
                   file=sys.stderr)
             sys.exit(2)
         device = next(r for r in rows
-                      if r["name"].startswith("dispatch_device"))
+                      if r["name"].startswith("dispatch_device_n"))
         if not device["responses_close"]:
             print("FAIL: device-arm response diverged beyond float "
                   "tolerance from the all-native response",
+                  file=sys.stderr)
+            sys.exit(2)
+        fused = next(r for r in rows
+                     if r["name"].startswith("dispatch_device_fused"))
+        if not fused["responses_close"]:
+            print("FAIL: fused-segment response diverged beyond float "
+                  "tolerance from the per-op device response",
                   file=sys.stderr)
             sys.exit(2)
 

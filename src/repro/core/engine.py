@@ -88,6 +88,15 @@ class VDMSAsyncEngine:
       default device, a platform string (``"cpu"``, ``"gpu"``,
       ``"tpu"``) pins one.  ``device_batch_size`` /
       ``device_max_wait_ms``: device micro-batching window.
+      ``device_fuse_segments``: fuse each routed device *segment*
+      (maximal run of consecutive device-placed ops) into one
+      jit-compiled program — one transfer each way per segment and
+      resident intermediates (default on when the device backend is;
+      ``False`` reproduces the per-op device path bit-for-bit).
+      ``num_device_workers``: device worker count (default: one per
+      visible device of the selected platform; > 1 wraps them in a
+      :class:`~repro.query.device_backend.MultiDeviceBackend` that
+      spreads segment groups by least estimated backlog).
 
     **Admission control** (off by default) —
       ``admission``: ``"none"`` (accept every ``submit()``
@@ -129,6 +138,8 @@ class VDMSAsyncEngine:
                  device_backend: bool | str = False,
                  device_batch_size: int = 8,
                  device_max_wait_ms: float = 2.0,
+                 device_fuse_segments: bool | None = None,
+                 num_device_workers: int | None = None,
                  admission: str = "none",
                  max_inflight_entities: int = 0,
                  admission_queue_cap: int = 1024):
@@ -163,15 +174,32 @@ class VDMSAsyncEngine:
             raise ValueError(
                 "device_backend requires dispatch='cost' (only the "
                 "cost-model router can place segments on the device)")
-        device_handle = None
-        if device_backend and isinstance(device_backend, str) \
-                and device_backend != "auto":
-            # resolve an explicit platform string ("cpu"/"gpu"/"tpu")
-            # HERE, before any pool/loop thread exists: jax raises on a
-            # platform this host does not have, and that failure must
-            # not leak running threads
+        if not device_backend:
+            # knobs that only parameterize the device backend must not
+            # pass silently on an engine that never builds one (the
+            # stray-override failure mode)
+            if device_fuse_segments is not None:
+                raise ValueError(
+                    "device_fuse_segments requires device_backend "
+                    "(there is no device segment to fuse without it)")
+            if num_device_workers is not None:
+                raise ValueError(
+                    "num_device_workers requires device_backend "
+                    "(there are no device workers without it)")
+        elif num_device_workers is not None and num_device_workers < 1:
+            raise ValueError(
+                f"num_device_workers must be >= 1, got "
+                f"{num_device_workers!r}")
+        device_pool = None
+        if device_backend:
+            # resolve the device set HERE, before any pool/loop thread
+            # exists: jax raises on a platform string this host does not
+            # have, and that failure must not leak running threads
             import jax
-            device_handle = jax.devices(device_backend)[0]
+            if isinstance(device_backend, str) and device_backend != "auto":
+                device_pool = jax.devices(device_backend)
+            else:
+                device_pool = jax.devices()
         if dispatch == "static":
             if cost_overrides:
                 # a forced regime with no router would be silently inert
@@ -237,12 +265,29 @@ class VDMSAsyncEngine:
                     # pulls in jax device plumbing a CPU-only engine
                     # never needs.  device_backend=True/"auto" targets
                     # jax's default device; a platform string ("cpu",
-                    # "gpu", "tpu") pins one (resolved above, pre-thread)
-                    from repro.query.device_backend import DeviceBackend
-                    self.device_backend = DeviceBackend(
-                        batch_size=device_batch_size,
-                        max_wait_s=device_max_wait_ms / 1000.0,
-                        tracker=self.cost_tracker, device=device_handle)
+                    # "gpu", "tpu") pins one (resolved above, pre-thread).
+                    # Fusion defaults ON; one worker per visible device
+                    # unless num_device_workers pins the count (a single
+                    # worker stays a plain DeviceBackend — no wrapper
+                    # indirection on the common path).
+                    from repro.query.device_backend import (
+                        DeviceBackend, MultiDeviceBackend)
+                    fuse = (device_fuse_segments
+                            if device_fuse_segments is not None else True)
+                    count = (num_device_workers
+                             if num_device_workers is not None
+                             else len(device_pool))
+                    workers = [
+                        DeviceBackend(
+                            batch_size=device_batch_size,
+                            max_wait_s=device_max_wait_ms / 1000.0,
+                            tracker=self.cost_tracker,
+                            device=device_pool[i % len(device_pool)],
+                            fuse_segments=fuse)
+                        for i in range(count)]
+                    self.device_backend = (
+                        workers[0] if count == 1
+                        else MultiDeviceBackend(workers))
         self.loop = EventLoop(self.pool, self.erd,
                               fuse_native=fuse_native,
                               batch_remote=batch_remote,
@@ -529,9 +574,11 @@ class VDMSAsyncEngine:
         per backend), ``handoffs`` / ``segments`` / ``chains_routed``,
         live ``queue_depths``, plus per-backend accounting blocks —
         ``batcher`` (groups/entities run, errors, cancelled drops) and
-        ``device`` (groups/entities run, jit ``compiles``, calibration
-        state, ``h2d_bytes``/``d2h_bytes`` moved) when those backends
-        exist.  ``{"mode": "static"}`` alone when the router is off
+        ``device`` (groups/entities/ops run, ``fused_segments``, jit
+        ``compiles`` + bounded-cache ``jit_entries``/``jit_evictions``,
+        calibration state, ``h2d_bytes``/``d2h_bytes`` moved,
+        ``padding_waste_frac``, and — with ``num_device_workers > 1``
+        — a ``per_device`` breakdown) when those backends exist.  ``{"mode": "static"}`` alone when the router is off
         (not to be confused with ``dispatch_policy``, the remote pool's
         round-robin/least-loaded server picker)."""
         out: dict = {"mode": self.dispatch}

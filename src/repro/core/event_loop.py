@@ -61,7 +61,12 @@ Beyond-paper knobs, default OFF:
   backends reply with ``("batched" | "device", entity, result, err)``
   messages on Queue_2 — the same reply path remote responses ride, so
   cache snapshots after device/batcher segments, cancellation, and
-  re-enqueue are uniform across all non-native backends.
+  re-enqueue are uniform across all non-native backends.  Device
+  replies append a 5th field, the ops advanced: with segment fusion a
+  whole run of consecutive device-routed ops completes as ONE reply,
+  and the cache snapshot lands at the segment boundary (prefix resume
+  is coarser by the fused run length — intermediates never left the
+  device).
   ``route=None`` (every static-dispatch entity) reproduces the paper's
   placement rule exactly.  The ``cost_tracker`` is calibrated online:
   native workers record per-op execution seconds.
@@ -521,11 +526,16 @@ class EventLoop:
                             pending = []
                 elif kind in ("batched", "device"):
                     # offload-backend group reply (batcher or device):
-                    # same handoff semantics as a remote response
-                    _, ent, result, err = msg
+                    # same handoff semantics as a remote response.
+                    # Device replies carry a 5th field — the number of
+                    # ops the reply advances (a fused device segment is
+                    # ONE reply covering the whole op run); batcher
+                    # replies stay 4-tuples advancing one op.
+                    _, ent, result, err = msg[:4]
                     self._handle_offload(
                         ent, result, err,
-                        "batcher" if kind == "batched" else "device")
+                        "batcher" if kind == "batched" else "device",
+                        advance=msg[4] if len(msg) > 4 else 1)
                 elif kind == "flush_coalesce":
                     self._flush_groups(list(self._groups))
                 else:
@@ -603,18 +613,26 @@ class EventLoop:
         self.erd.update(ent, stage)
         self.on_entity_done(ent)
 
-    def _advance_segment(self, ent: Entity, result, source: str):
+    def _advance_segment(self, ent: Entity, result, source: str,
+                         advance: int = 1):
         """State half of a segment completion: install the result,
         advance the op index, update the ERD, and record the cache
         snapshot.  Deliberately split from :meth:`_finish_segment` — in
         a coalesced-batch fan-out every member's snapshot must be
         recorded BEFORE any member's client callback runs, so a
         callback that raises (or hangs) can never skip the remaining
-        snapshots of its own group."""
-        op = ent.current_op()
+        snapshots of its own group.
+
+        ``advance > 1`` is a fused device segment completing as one
+        unit: the op index jumps past the whole run and the cache
+        snapshot lands at the segment BOUNDARY (intermediates never
+        left the device, so there is nothing to snapshot mid-segment —
+        prefix resume is coarser by exactly the fused run length)."""
+        ops = ent.ops[ent.op_index:ent.op_index + advance]
         ent.data = result
-        ent.op_index += 1
-        self.erd.update(ent, f"{source}:{op.name}")
+        ent.op_index += advance
+        stage = "+".join(op.name for op in ops)
+        self.erd.update(ent, f"{source}:{stage}")
         self._record_cache(ent)
 
     def _finish_segment(self, ent: Entity):
@@ -626,14 +644,18 @@ class EventLoop:
         else:
             self.enqueue(ent)      # Q1-Enqueue from Thread_3
 
-    def _complete_segment(self, ent: Entity, result, source: str):
-        self._advance_segment(ent, result, source)
+    def _complete_segment(self, ent: Entity, result, source: str,
+                          advance: int = 1):
+        self._advance_segment(ent, result, source, advance)
         self._finish_segment(ent)
 
-    def _handle_offload(self, ent: Entity, result, err, source: str):
+    def _handle_offload(self, ent: Entity, result, err, source: str,
+                        advance: int = 1):
         """Reply tail for an offload-backend group member (``source`` is
         ``"batcher"`` or ``"device"``; ERD stages and failure messages
-        name the backend that actually ran the op)."""
+        name the backend that actually ran the op).  ``advance`` is the
+        number of ops the reply covers (> 1 for a fused device
+        segment)."""
         if self.is_cancelled(ent.query_id):
             return                 # cancelled while in the group: drop
         if err is not None:
@@ -642,7 +664,7 @@ class EventLoop:
                 ent, f"{word} op {ent.current_op().name} failed: {err}",
                 f"{source}-error")
             return
-        self._complete_segment(ent, result, source)
+        self._complete_segment(ent, result, source, advance)
 
     def _handle_response(self, tag: str, req: Request, payload):
         status, result = self.pool.handle_response(tag, req, payload)

@@ -62,6 +62,26 @@ def gaussian_blur(img, ksize: int, sigma_x: float, sigma_y: float | None = None,
                                    interpret=(impl == "pallas_interpret"))
 
 
+# ----------------------------------------------------------- preprocess
+def fused_preprocess(img, *, resize_h: int, resize_w: int,
+                     method: str = "bilinear",
+                     crop_x: int, crop_y: int, crop_w: int, crop_h: int,
+                     mean: float = 0.0, std: float = 1.0, impl="auto"):
+    """img (..., H, W, C): fused resize→crop→normalize in one launch
+    (Pallas matmul formulation on TPU, composed reference ops
+    elsewhere).  See repro.kernels.preprocess for the folding trick."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    from repro.kernels import preprocess as pp
+    kw = dict(resize_h=resize_h, resize_w=resize_w, method=method,
+              crop_x=crop_x, crop_y=crop_y, crop_w=crop_w, crop_h=crop_h,
+              mean=mean, std=std)
+    if impl == "ref":
+        return pp.fused_resize_crop_normalize_ref(img, **kw)
+    return pp.fused_resize_crop_normalize_pallas(
+        img, interpret=(impl == "pallas_interpret"), **kw)
+
+
 # ----------------------------------------------------------------- rwkv
 def rwkv6_scan(r, k, v, w, u, state=None, *, impl="auto", chunk=64):
     if impl == "auto":

@@ -33,6 +33,17 @@ Cost model (ARCHITECTURE.md "Dispatch" has the diagram)::
     batcher(op) = wait/2 + op_est / G          + backlog_batcher
     device(op)  = wait/2 + transfer(nbytes, B) + op_est_dev
                   + compile_s / (1 + runs)     + backlog_device
+    device_resident(op) = op_est_dev           (segment fusion on)
+
+The last line is the *segment* pricing: a backend that declares
+``resident_capable`` (the device backend with ``fuse_segments`` on)
+charges its full ``estimate`` — batching wait, transfer, compile
+amortization — only on the op that ENTERS a run of consecutive
+placements, and ``estimate_resident`` (pure marginal compute) for every
+subsequent op that stays.  The DP therefore prices device *segments*,
+not ops: transfer and dispatch amortize over the whole fused segment,
+compile over its run count, which widens the regime where the device
+wins exactly as fusing the execution does.
 
 where ``op_est`` is an EWMA of observed per-op execution seconds
 (:class:`OpCostTracker`, calibrated online by the native workers and the
@@ -308,6 +319,11 @@ class Backend(abc.ABC):
 
     name: str = "?"
 
+    #: Whether consecutive placements on this backend keep the payload
+    #: resident (no per-op transfer/entry cost after the first).  The
+    #: router then prices in-segment ops with :meth:`estimate_resident`.
+    resident_capable: bool = False
+
     @abc.abstractmethod
     def can_run(self, op) -> bool:
         """Whether this backend can execute ``op`` at all.  A cost
@@ -321,6 +337,13 @@ class Backend(abc.ABC):
         ``payload_bytes`` is the router's estimate of the op's INPUT
         payload (threaded through the chain from observed output-size
         EWMAs), for backends with a transfer term."""
+
+    def estimate_resident(self, op, payload_bytes: int) -> float:
+        """Estimated seconds for ``op`` when the PREVIOUS op already ran
+        here and the backend is ``resident_capable`` — the marginal cost
+        of extending the resident segment by one op (no entry costs).
+        Default: same as :meth:`estimate` (no residency advantage)."""
+        return self.estimate(op, payload_bytes)
 
     @abc.abstractmethod
     def queue_depth(self) -> int:
@@ -466,6 +489,22 @@ class BackendRouter:
             return float(ov[backend])
         return b.estimate(op, payload_bytes)
 
+    def cost_resident(self, op, backend: str, payload_bytes: int = 0) -> float:
+        """Estimated seconds of ``op`` on ``backend`` when the previous
+        op was ALSO placed there and the backend keeps payloads resident
+        across consecutive ops (``resident_capable`` — the fused device
+        segment).  Overrides pin the per-op cost in both regimes, so a
+        forced cost regime is unaffected by fusion."""
+        b = self.backends[backend]
+        if not b.can_run(op):
+            return _INF
+        ov = self.overrides.get(op.name)
+        if ov is not None and backend in ov:
+            return float(ov[backend])
+        if not getattr(b, "resident_capable", False):
+            return b.estimate(op, payload_bytes)
+        return b.estimate_resident(op, payload_bytes)
+
     # ----------------------------------------------------------- routing
     def route(self, ops, start: int = 0,
               payload_bytes: int = 0) -> Optional[list]:
@@ -486,23 +525,35 @@ class BackendRouter:
         best: dict[str, float] = {}
         parent: list[dict[str, str]] = []
         for i, op in enumerate(ops[start:]):
+            # two step prices per backend: "cold" (entering the backend
+            # for this op — full estimate with wait/transfer/compile
+            # terms) and "resident" (staying on a resident-capable
+            # backend — marginal compute only).  For every backend that
+            # is not resident_capable the two coincide, and the DP
+            # degenerates to the original per-op recurrence.
             step = {b: self.cost(op, b, pb) for b in names}
+            res_step = {b: self.cost_resident(op, b, pb) for b in names}
             if self.tracker is not None:
                 pb = self.tracker.out_bytes(op, default=pb)
             if i == 0:
+                # chains enter at native (Queue_1), so the first op is
+                # always a cold entry — residency starts at op 2
                 cur = {b: step[b] + (self.handoff_s if b != NATIVE else 0.0)
                        for b in names}
                 parent.append({b: "" for b in names})
             else:
                 cur, par = {}, {}
                 for b in names:
-                    prev_b = min(
-                        names,
-                        key=lambda p: best[p]
-                        + (self.handoff_s if p != b else 0.0))
-                    cur[b] = step[b] + best[prev_b] \
-                        + (self.handoff_s if prev_b != b else 0.0)
-                    par[b] = prev_b
+                    stay = best[b] + res_step[b]
+                    enter_from, enter_base = b, _INF
+                    for p in names:
+                        if p != b and best[p] < enter_base:
+                            enter_base, enter_from = best[p], p
+                    enter = enter_base + self.handoff_s + step[b]
+                    if stay <= enter:
+                        cur[b], par[b] = stay, b
+                    else:
+                        cur[b], par[b] = enter, enter_from
                 parent.append(par)
             best = cur
         end = min(names, key=lambda b: best[b])

@@ -24,7 +24,13 @@ structure first-class instead:
   "static"``), ``expand`` also routes each entity's remaining op chain
   across backends — AFTER the cache lookup, so a prefix-resumed entity
   is routed from its resume op only, never for work the cache already
-  paid for.
+  paid for.  A run of consecutive ``device`` placements is a *segment*:
+  with ``device_fuse_segments`` on, the event loop hands the whole run
+  to the device backend as ONE unit (one fused jit program, one
+  transfer each way) and the result cache snapshots only at segment
+  boundaries — so a later query's prefix hit resumes at a boundary,
+  never mid-segment (the intermediates never left the device; the
+  router then re-prices the remaining tail from the resume point).
 
 Result assembly stays deterministic regardless of execution order: the
 plan records each command's matched-eid order, and the session assembles

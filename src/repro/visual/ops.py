@@ -64,6 +64,13 @@ def downsample(img, *, fx: float = 2.0, fy: float = 2.0):
                             "bilinear")
 
 
+def normalize(img, *, mean: float = 0.0, std: float = 1.0):
+    """Affine channel normalization ``(img - mean) / std`` — the
+    standard model-preprocessing tail.  Scalar parameters only (op
+    params must stay hashable for pipeline signatures)."""
+    return ((img - jnp.float32(mean)) / jnp.float32(std)).astype(img.dtype)
+
+
 def caption(img, *, text: str = "", x: int = 4, y: int = 4,
             intensity: float = 1.0):
     return draw_text(img, text, x, y, intensity)
@@ -102,6 +109,7 @@ NATIVE_OPS = {
     "grayscale": grayscale,
     "blur": blur,
     "threshold": threshold,
+    "normalize": normalize,
     "upsample": upsample,
     "downsample": downsample,
     "caption": caption,

@@ -432,8 +432,9 @@ def test_device_backend_rejects_late_submit_after_shutdown():
                  query_id="q")
     be.submit(ent)
     be.shutdown()
-    kind, got, res, err = replies.get(timeout=5)
+    kind, got, res, err, advance = replies.get(timeout=5)
     assert kind == "device" and err is None and got.eid == "d0"
+    assert advance == 1
     with pytest.raises(RuntimeError, match="shut down"):
         be.submit(ent)
 

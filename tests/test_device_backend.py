@@ -101,6 +101,10 @@ def test_device_off_cost_engine_matches_static():
 
 # ------------------------------------------------- forced device regime
 def test_forced_device_regime_routes_and_matches_static():
+    # fusion is the default: once the pinned rotate enters the device,
+    # residency pricing keeps flip and threshold there too (marginal
+    # compute beats native + handoff), so the segment is rotate-onward —
+    # 3 of the 4 ops, per entity
     eng_sta = _mk_engine()
     eng_dev = _mk_engine(dispatch="cost", device_backend=True,
                          cost_overrides=DEVICE_PIN,
@@ -113,13 +117,43 @@ def test_forced_device_regime_routes_and_matches_static():
         assert r_dev["stats"]["failed"] == 0
         _assert_same_entities(r_sta, r_dev)
         stats = eng_dev.dispatch_stats()
-        assert stats["placements"]["device"] == 6      # rotate, per entity
+        assert stats["placements"]["device"] == 18   # rotate+flip+threshold
         d = stats["device"]
         assert d["entities_run"] == 6
+        assert d["ops_run"] == 18
+        assert d["fused_segments"] >= 1
         assert d["groups_run"] >= 1
         assert d["pending"] == 0
         assert d["compiles"] >= 1
         assert d["h2d_bytes"] > 0 and d["d2h_bytes"] > 0
+    finally:
+        eng_sta.shutdown()
+        eng_dev.shutdown()
+
+
+def test_fusion_off_reproduces_per_op_placement_and_results():
+    # device_fuse_segments=False is the pre-fusion engine: the router
+    # prices every device op cold (no residency discount), so ONLY the
+    # pinned rotate lands there, each op is its own device group, and
+    # responses stay byte-identical to the static engine
+    eng_sta = _mk_engine()
+    eng_dev = _mk_engine(dispatch="cost", device_backend=True,
+                         device_fuse_segments=False,
+                         cost_overrides=DEVICE_PIN,
+                         device_max_wait_ms=50.0)
+    try:
+        _add_images(eng_sta)
+        _add_images(eng_dev)
+        r_sta = eng_sta.execute(_find(), timeout=60)
+        r_dev = eng_dev.execute(_find(), timeout=60)
+        assert r_dev["stats"]["failed"] == 0
+        _assert_same_entities(r_sta, r_dev)
+        stats = eng_dev.dispatch_stats()
+        assert stats["placements"]["device"] == 6    # rotate, per entity
+        d = stats["device"]
+        assert d["entities_run"] == 6
+        assert d["ops_run"] == 6
+        assert d["fused_segments"] == 0
     finally:
         eng_sta.shutdown()
         eng_dev.shutdown()

@@ -88,6 +88,7 @@ def test_all_native_ops_run(name):
         "grayscale": {},
         "blur": {"ksize": 3, "sigma_x": 1.0},
         "threshold": {"value": 0.5},
+        "normalize": {"mean": 0.4, "std": 0.25},
         "upsample": {"fx": 1.5, "fy": 1.5},
         "downsample": {"fx": 2.0, "fy": 2.0},
         "caption": {"text": "HI", "x": 1, "y": 1},
