@@ -20,6 +20,7 @@ from __future__ import annotations
 import itertools
 import os
 import threading
+import time
 from typing import Callable, Optional
 
 import numpy as np
@@ -33,6 +34,7 @@ from repro.query.admission import AdmissionController, OverloadError
 from repro.query.dispatch import (BackendRouter, NativeBackend, OpCostTracker,
                                   RemoteBackend, StaticRouter,
                                   validate_overrides)
+from repro.query.health import HealthRegistry
 from repro.query.language import parse_query
 from repro.query.metadata import MetadataStore
 from repro.query.planner import CommandPlan, QueryPlanner
@@ -111,6 +113,31 @@ class VDMSAsyncEngine:
       entities; overflowing it sheds even under ``"queue"``.
       ``submit(..., priority=)`` orders the pending lane.
 
+    **Fault tolerance** (off by default; every default reproduces
+    today's behavior bit-for-bit) —
+      ``max_retries``: attempts per remote request (first included).
+      ``retry_backoff_base_s`` / ``retry_backoff_max_s``: bounded
+      exponential backoff with full jitter between retries (base 0.0 =
+      instant resubmit, the old behavior); a retry always targets a
+      *different* live server than the one that just failed.
+      ``heartbeat_timeout_s``: remote servers beat a
+      :class:`~repro.distributed.fault.HeartbeatMonitor`; a silent
+      server (died without an error reply) is declared dead and its
+      in-flight work requeued to live peers.  ``fallback``: ``"none"``
+      | ``"native"`` — on a transient final-attempt failure, re-route
+      the failing op to the native backend instead of failing the
+      entity (each op falls back at most once).  ``breaker_enabled``
+      (+ ``breaker_failure_threshold`` / ``breaker_open_s`` /
+      ``breaker_probes``, requires ``dispatch="cost"``): per-backend
+      circuit breakers whose error-rate EWMA feeds the router as a
+      health penalty; an OPEN backend is unroutable until its
+      half-open probes succeed.  ``fault_injector``: a seeded
+      :class:`~repro.distributed.fault.FaultInjector` deterministically
+      injecting error/crash/latency/die/hang faults into remote
+      servers and offload backends (tests and resilience benchmarks;
+      ``None`` disables injection entirely).
+      ``submit(..., timeout_s=)`` bounds the retry deadline budget.
+
     Public surface: :meth:`submit` / :meth:`execute` for queries,
     :meth:`add_entity` for ingest, :meth:`scale_remote` for elasticity,
     and the introspection quartet :meth:`utilization` /
@@ -142,7 +169,17 @@ class VDMSAsyncEngine:
                  num_device_workers: int | None = None,
                  admission: str = "none",
                  max_inflight_entities: int = 0,
-                 admission_queue_cap: int = 1024):
+                 admission_queue_cap: int = 1024,
+                 max_retries: int = 3,
+                 retry_backoff_base_s: float = 0.0,
+                 retry_backoff_max_s: float = 1.0,
+                 heartbeat_timeout_s: float = 0.0,
+                 fallback: str = "none",
+                 breaker_enabled: bool = False,
+                 breaker_failure_threshold: float | None = None,
+                 breaker_open_s: float | None = None,
+                 breaker_probes: int | None = None,
+                 fault_injector=None):
         if admission not in ("none", "queue", "shed"):
             raise ValueError(
                 f"admission must be 'none' (accept everything, the "
@@ -221,11 +258,64 @@ class VDMSAsyncEngine:
             known = ("native", "remote", "batcher") \
                 + (("device",) if device_backend else ())
             validate_overrides(cost_overrides, known=known)
+        # fault-tolerance knobs, validated BEFORE any thread exists
+        # (same discipline as admission/dispatch above)
+        if fallback not in ("none", "native"):
+            raise ValueError(
+                f"fallback must be 'none' (a final-attempt failure fails "
+                f"the entity, the paper-faithful default) or 'native' "
+                f"(re-route the failing op to the native backend), got "
+                f"{fallback!r}")
+        if max_retries < 1:
+            raise ValueError(
+                f"max_retries must be >= 1 (the first attempt counts), "
+                f"got {max_retries!r}")
+        if breaker_enabled and dispatch != "cost":
+            # a breaker no router consults would be silently inert —
+            # health only changes behavior through the cost-model DP
+            raise ValueError(
+                "breaker_enabled requires dispatch='cost' (only the "
+                "cost-model router consults backend health)")
+        if not breaker_enabled:
+            for val, name in ((breaker_failure_threshold,
+                               "breaker_failure_threshold"),
+                              (breaker_open_s, "breaker_open_s"),
+                              (breaker_probes, "breaker_probes")):
+                if val is not None:
+                    raise ValueError(
+                        f"{name} requires breaker_enabled (there is no "
+                        f"circuit breaker to parameterize without it)")
+        self.health = None
+        self.fallback = fallback
+        if breaker_enabled:
+            names = ["native", "remote", "batcher"]
+            if device_backend:
+                names.append("device")
+            bk = {}
+            if breaker_failure_threshold is not None:
+                bk["failure_threshold"] = breaker_failure_threshold
+            if breaker_open_s is not None:
+                bk["open_s"] = breaker_open_s
+            if breaker_probes is not None:
+                bk["half_open_probes"] = breaker_probes
+            self.health = HealthRegistry(names, **bk)
+        # gates the fault-tolerance stats blocks in dispatch_stats(): a
+        # default engine's dict stays byte-identical to the baseline
+        self._ft_visible = (fault_injector is not None
+                            or heartbeat_timeout_s > 0.0
+                            or retry_backoff_base_s > 0.0
+                            or breaker_enabled or fallback != "none")
         self.meta = MetadataStore()
         self.store = BlobStore()
         self.erd = ERD()
-        self.pool = RemoteServerPool(num_remote_servers, transport,
-                                     policy=dispatch_policy)
+        self.pool = RemoteServerPool(
+            num_remote_servers, transport,
+            policy=dispatch_policy,
+            max_retries=max_retries,
+            retry_backoff_base_s=retry_backoff_base_s,
+            retry_backoff_max_s=retry_backoff_max_s,
+            heartbeat_timeout_s=heartbeat_timeout_s,
+            fault_injector=fault_injector)
         # hot-path perf subsystems, both paper-faithful OFF by default:
         # cache_capacity > 0 enables the (eid, pipeline-signature) result
         # cache; coalesce_window_ms > 0 enables cross-session remote
@@ -288,6 +378,14 @@ class VDMSAsyncEngine:
                     self.device_backend = (
                         workers[0] if count == 1
                         else MultiDeviceBackend(workers))
+                if fault_injector is not None:
+                    # offload backends consult the injector per group
+                    # run (site "backend:<name>"); remote servers got
+                    # theirs via the pool above
+                    self.batcher_backend.fault_injector = fault_injector
+                    if self.device_backend is not None:
+                        self.device_backend.fault_injector = \
+                            fault_injector
         self.loop = EventLoop(self.pool, self.erd,
                               fuse_native=fuse_native,
                               batch_remote=batch_remote,
@@ -300,7 +398,9 @@ class VDMSAsyncEngine:
                               result_cache=self.result_cache,
                               batcher_backend=self.batcher_backend,
                               device_backend=self.device_backend,
-                              cost_tracker=self.cost_tracker)
+                              cost_tracker=self.cost_tracker,
+                              health=self.health,
+                              fallback_native=fallback == "native")
         if dispatch == "native":
             self.router = StaticRouter("native")
         elif dispatch == "cost":
@@ -315,7 +415,8 @@ class VDMSAsyncEngine:
             self.router = BackendRouter(
                 backends,
                 overrides=cost_overrides,
-                tracker=self.cost_tracker)
+                tracker=self.cost_tracker,
+                health=self.health)
         self.planner = QueryPlanner(self.meta, self.store,
                                     result_cache=self.result_cache,
                                     router=self.router)
@@ -334,7 +435,8 @@ class VDMSAsyncEngine:
     # ------------------------------------------------------------- query
     def submit(self, query: list[dict] | dict, *,
                on_entity: Optional[Callable[[Entity], None]] = None,
-               cache: bool = True, priority: int = 0) -> QueryFuture:
+               cache: bool = True, priority: int = 0,
+               timeout_s: Optional[float] = None) -> QueryFuture:
         """Submit a VDMS JSON query; returns immediately with a
         :class:`QueryFuture`.
 
@@ -361,14 +463,23 @@ class VDMSAsyncEngine:
         whose first phase does not fit under ``max_inflight_entities``
         raises :class:`~repro.query.admission.OverloadError` from this
         call — fail fast, with ``retry_after_s`` attached — and nothing
-        of it is launched."""
+        of it is launched.
+
+        ``timeout_s`` sets the query's retry deadline budget: remote
+        retries (and their backoff sleeps) never outlive it, so a
+        retrying request cannot keep burning server capacity after the
+        client's own ``result(timeout)`` would have given up.
+        ``execute(query, timeout)`` wires its timeout through here."""
         if self._shut:
             raise RuntimeError("engine is shut down")
         cmds = parse_query(query)
         plan = self.planner.compile(cmds)
         qid = str(next(self._qid))
+        deadline = (time.monotonic() + timeout_s
+                    if timeout_s is not None else None)
         session = QuerySession(qid, plan, self, on_entity=on_entity,
-                               use_cache=cache, priority=priority)
+                               use_cache=cache, priority=priority,
+                               deadline=deadline)
         fut = QueryFuture(session)     # built before launch: the return
         with self._session_lock:       # after start() is a single bytecode
             if self._shut:
@@ -398,7 +509,7 @@ class VDMSAsyncEngine:
         (the old loop applied it per command) and on expiry the query is
         *cancelled* — its queued and in-flight entities are dropped,
         nothing leaks — where the old loop raised and orphaned them."""
-        fut = self.submit(query, cache=cache)
+        fut = self.submit(query, cache=cache, timeout_s=timeout)
         try:
             return fut.result(timeout)
         except TimeoutError:
@@ -588,6 +699,13 @@ class VDMSAsyncEngine:
             out["batcher"] = self.batcher_backend.stats()
         if self.device_backend is not None:
             out["device"] = self.device_backend.stats()
+        if self.health is not None:
+            out["breakers"] = self.health.stats()
+        if self._ft_visible:
+            # only when a fault-tolerance knob is on: a default engine's
+            # dict stays byte-identical to the baseline
+            out["pool"] = self.pool.health_stats()
+            out["fallbacks"] = self.loop.fallbacks
         return out
 
     def admission_stats(self) -> dict:

@@ -41,6 +41,13 @@ class Entity:
     # in-flight slot, so the error path's second on_entity_done call
     # for the same entity can never double-release capacity
     admission_released: bool = False
+    # fault tolerance (set only when the relevant knobs are on):
+    # deadline is the query's monotonic retry budget — remote retries
+    # never outlive it; fallback_ops holds op indices the event loop
+    # re-routed to the native backend after a final-attempt failure
+    # (each op falls back at most once — a native failure is terminal)
+    deadline: Optional[float] = None
+    fallback_ops: Optional[set] = None
 
     def current_op(self):
         return self.ops[self.op_index] if self.op_index < len(self.ops) else None

@@ -93,6 +93,7 @@ from typing import Any, Callable, Optional
 from repro.core.entity import ERD, Entity
 from repro.core.pipeline import run_native_chain, run_op
 from repro.core.remote import RemoteServerPool, Request
+from repro.distributed.fault import PermanentError
 
 _STOP = object()
 
@@ -304,9 +305,21 @@ class EventLoop:
                  batcher_backend=None,
                  device_backend=None,
                  cost_tracker=None,
+                 health=None,
+                 fallback_native: bool = False,
                  clock=time.monotonic):
         self.pool = pool
         self.erd = erd
+        # fault-tolerance wiring (engine-provided, both default off):
+        # ``health`` is the HealthRegistry fed per-attempt outcomes;
+        # ``fallback_native`` enables the final-attempt re-route of a
+        # failing op to the native backend instead of failing the entity
+        self.health = health
+        self.fallback_native = fallback_native
+        self.fallbacks = 0
+        # stub pools in tests implement only the original surface
+        self._pool_tick = getattr(pool, "tick", None)
+        self._pool_next_due = getattr(pool, "next_retry_due", None)
         self.fuse_native = fuse_native
         self.batch_remote = max(1, batch_remote)
         self.coalesce_window_s = max(0.0, coalesce_window_s)
@@ -367,6 +380,8 @@ class EventLoop:
             try:
                 self._run_native(ent)
             except Exception as e:  # noqa: BLE001
+                if self.health is not None:
+                    self.health.record_failure("native")
                 ent.failed = f"{type(e).__name__}: {e}"
                 self.erd.update(ent, "native-error")
                 try:
@@ -376,11 +391,14 @@ class EventLoop:
             finally:
                 meter.stop()
 
-    @staticmethod
-    def _backend_for(ent: Entity) -> str:
-        """Backend of the entity's current op: its route when the router
-        placed it, else the paper's static rule (native iff tagged
-        native) — so route=None entities behave byte-identically."""
+    def _backend_for(self, ent: Entity) -> str:
+        """Backend of the entity's current op: the native fallback set
+        first (ops a failed backend handed back run locally exactly
+        once), then its route when the router placed it, else the
+        paper's static rule (native iff tagged native) — so route=None
+        entities behave byte-identically."""
+        if ent.fallback_ops is not None and ent.op_index in ent.fallback_ops:
+            return "native"
         if ent.route is not None and ent.op_index < len(ent.route):
             return ent.route[ent.op_index]
         return "native" if ent.current_op().is_native else "remote"
@@ -437,6 +455,8 @@ class EventLoop:
                     # an expensive resume point, same as a remote reply
                     self._record_cache(ent)
         self._record_cache(ent)
+        if self.health is not None:
+            self.health.record_success("native")
         self.on_entity_done(ent)
 
     def _record_cache(self, ent: Entity):
@@ -486,13 +506,26 @@ class EventLoop:
             if self._deadlines:
                 timeout = min(timeout, max(0.0, min(self._deadlines.values())
                                            - self._clock()))
+            if self._pool_next_due is not None:
+                # a scheduled retry backoff must not oversleep behind the
+                # straggler cadence
+                due = self._pool_next_due()
+                if due is not None:
+                    timeout = min(timeout,
+                                  max(0.0, due - time.monotonic()))
             try:
                 msg = self.queue2.get(timeout=timeout)
             except queue.Empty:
                 msg = None
             now = time.monotonic()
+            if self._pool_next_due is not None:
+                due = self._pool_next_due()
+                if due is not None and due <= now:
+                    self.pool.flush_due_retries()
             if now - last_straggler > self.straggler_check_s:
-                self.pool.reissue_stragglers()
+                # tick() adds elapsed-backoff + heartbeat maintenance on
+                # pools that grew it; test stubs keep the original surface
+                (self._pool_tick or self.pool.reissue_stragglers)()
                 last_straggler = now
             if msg is _STOP:
                 return
@@ -568,11 +601,11 @@ class EventLoop:
         if not group:
             return
         if len(group) == 1:
-            self.pool.dispatch(group[0], group[0].current_op(), self.queue2)
+            self._dispatch_remote(group[0], group[0].current_op())
             return
         self.coalesced_batches += 1
         self.coalesced_entities += len(group)
-        self.pool.dispatch(group, group[0].current_op(), self.queue2)
+        self._dispatch_remote(group, group[0].current_op())
 
     def _flush(self, entities: list[Entity]):
         """Q2-Enqueue handling: dispatch entities' current ops (grouped
@@ -585,10 +618,28 @@ class EventLoop:
                 groups.setdefault(e.current_op(), []).append(e)
             for op, group in groups.items():
                 payload = group if len(group) > 1 else group[0]
-                self.pool.dispatch(payload, op, self.queue2)
+                self._dispatch_remote(payload, op)
         else:
             for e in entities:
-                self.pool.dispatch(e, e.current_op(), self.queue2)
+                self._dispatch_remote(e, e.current_op())
+
+    def _dispatch_remote(self, payload, op):
+        """``pool.dispatch`` with Thread_3 protected from a pool-level
+        raise (every remote server dead): fail — or fall back to native
+        — per entity instead of killing the dispatch thread (every
+        later query would hang on a dead Thread_3)."""
+        try:
+            self.pool.dispatch(payload, op, self.queue2)
+        except RuntimeError as e:
+            ents = payload if isinstance(payload, list) else [payload]
+            for ent in ents:
+                if self.is_cancelled(ent.query_id):
+                    continue
+                if self._try_fallback(ent, 1, "remote", e):
+                    continue
+                self._fail_segment(
+                    ent, f"remote op {op.name} failed: {e}",
+                    "remote-error")
 
     def _submit_offload(self, backend, ent: Entity):
         """Hand a routed entity to an offload backend (batcher/device).
@@ -612,6 +663,34 @@ class EventLoop:
         ent.failed = msg
         self.erd.update(ent, stage)
         self.on_entity_done(ent)
+
+    def _try_fallback(self, ent: Entity, n_ops: int, source: str,
+                      err) -> bool:
+        """Final-attempt graceful degradation: re-route the failing
+        op(s) to the native backend — which can run every op — instead
+        of failing the entity, so an injected or real fault degrades
+        the query to *slower*, never to *failed*.  Off unless the
+        engine enables ``fallback="native"``.  Guards: never applied
+        twice to the same op (a native failure is terminal, so fallback
+        cannot loop), and never for a
+        :class:`~repro.distributed.fault.PermanentError` (deterministic
+        failures — including an exhausted deadline — would fail
+        natively too, or arrive after the client is gone)."""
+        if not self.fallback_native or isinstance(err, PermanentError):
+            return False
+        i = ent.op_index
+        if ent.fallback_ops is not None and i in ent.fallback_ops:
+            return False
+        if ent.fallback_ops is None:
+            ent.fallback_ops = set()
+        # a fused device segment fails as one unit: its whole op run
+        # falls back together (advance = run length)
+        ent.fallback_ops.update(
+            range(i, min(len(ent.ops), i + max(1, n_ops))))
+        self.fallbacks += 1
+        self.erd.update(ent, f"{source}-fallback")
+        self.enqueue(ent)      # Q1-Enqueue: native workers pick it up
+        return True
 
     def _advance_segment(self, ent: Entity, result, source: str,
                          advance: int = 1):
@@ -659,15 +738,27 @@ class EventLoop:
         if self.is_cancelled(ent.query_id):
             return                 # cancelled while in the group: drop
         if err is not None:
+            if self.health is not None:
+                self.health.record_failure(source)
+            if self._try_fallback(ent, advance, source, err):
+                return
             word = "batched" if source == "batcher" else source
             self._fail_segment(
                 ent, f"{word} op {ent.current_op().name} failed: {err}",
                 f"{source}-error")
             return
+        if self.health is not None:
+            self.health.record_success(source)
         self._complete_segment(ent, result, source, advance)
 
     def _handle_response(self, tag: str, req: Request, payload):
         status, result = self.pool.handle_response(tag, req, payload)
+        if self.health is not None and status in ("done", "requeued",
+                                                  "failed"):
+            if status == "done":
+                self.health.record_success("remote")
+            else:
+                self.health.record_failure("remote")
         if status in ("dropped", "requeued"):
             return
         ents = req.entity if isinstance(req.entity, list) else [req.entity]
@@ -684,6 +775,8 @@ class EventLoop:
             if self.is_cancelled(ent.query_id):
                 continue           # cancelled while in flight: drop silently
             if status == "failed":
+                if self._try_fallback(ent, 1, "remote", payload):
+                    continue       # re-enqueued for native; not failed
                 ent.failed = (f"remote op {ent.current_op().name} "
                               f"failed: {payload}")
                 self.erd.update(ent, "remote-error")

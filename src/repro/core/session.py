@@ -40,13 +40,15 @@ class QuerySession:
 
     def __init__(self, qid: str, plan: "QueryPlan", engine: Any,
                  on_entity: Optional[Callable[[Entity], None]] = None,
-                 use_cache: bool = True, priority: int = 0):
+                 use_cache: bool = True, priority: int = 0,
+                 deadline: Optional[float] = None):
         self.qid = qid
         self.plan = plan
         self._engine = engine
         self._on_entity = on_entity
         self.use_cache = use_cache
         self.priority = priority   # admission pending-lane ordering
+        self.deadline = deadline   # monotonic; bounds remote retries
         self._cv = threading.Condition()
         self._state = _RUNNING
         self._phase = -1
@@ -109,6 +111,11 @@ class QuerySession:
                             (to_run if not e.done() else instant).append(e)
                     self._phase = phase_idx
                     self._pending = len(to_run)
+                    if self.deadline is not None:
+                        # retries of this query's remote work must not
+                        # outlive its timeout budget
+                        for e in to_run:
+                            e.deadline = self.deadline
                     for e in instant:
                         self._record_locked(e)
                 for e in instant:

@@ -1,19 +1,188 @@
-"""Fault tolerance for long-running training: heartbeats, failure
-detection, checkpoint/restart orchestration.
+"""Fault tolerance: error taxonomy, deterministic fault injection,
+heartbeats, failure detection, checkpoint/restart orchestration.
 
-The device-side contract on a real pod: a node failure kills the jax
-distributed client -> the launcher (repro/launch/train.py) restarts the
-job -> ``resume()`` restores the latest atomic checkpoint and the loader
-fast-forwards to the recorded step.  Here the host-side logic is real and
-tested (tests/test_fault.py); node death is injected via HeartbeatMonitor.
+Two halves share this module:
+
+- **Query-path fault layer** (PR 7): the :class:`TransientError` /
+  :class:`PermanentError` taxonomy threaded through the dispatch stack
+  (``core/remote.py``, ``query/dispatch.py``,
+  ``query/device_backend.py``), and the seeded :class:`FaultInjector`
+  that deterministically injects crash-before-reply, latency spikes,
+  error replies, server death mid-batch, and silent hangs into any
+  offload :class:`~repro.query.dispatch.Backend` and into
+  :class:`~repro.core.remote.RemoteServer`.  The
+  :class:`HeartbeatMonitor` below detects the silent deaths.
+
+- **Training-side orchestration**: the device-side contract on a real
+  pod — a node failure kills the jax distributed client -> the launcher
+  (repro/launch/train.py) restarts the job -> ``resume()`` restores the
+  latest atomic checkpoint and the loader fast-forwards to the recorded
+  step.  Host-side logic is real and tested (tests/test_fault.py); node
+  death is injected via HeartbeatMonitor.
 """
 from __future__ import annotations
 
+import dataclasses
+import random
 import threading
 import time
 from typing import Callable, Optional
 
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+# --------------------------------------------------------- error taxonomy
+class TransientError(RuntimeError):
+    """A failure worth retrying: the same request may succeed on another
+    attempt or another server (injected faults, flaky transport, a
+    server that died mid-request).  The retry machinery in
+    ``RemoteServerPool.handle_response`` retries these (and, for
+    backward compatibility, any *untyped* exception) up to
+    ``max_retries`` with bounded exponential backoff."""
+
+
+class PermanentError(RuntimeError):
+    """A deterministic failure: retrying the same request would fail the
+    same way (a malformed op, a contract violation).  Skips retries AND
+    the final-attempt native fallback — degradation cannot rescue a
+    request that is wrong, only one that is unlucky."""
+
+
+class NoLiveServersError(TransientError):
+    """Every remote server is dead.  Transient — servers can scale back
+    out — but unroutable right now; the event loop converts it into a
+    per-entity failure or a native fallback instead of letting it kill
+    the dispatch thread."""
+
+
+class DeadlineExceeded(PermanentError):
+    """A retry would outlive its query's deadline budget.  Permanent by
+    classification: the client has already timed out, so neither another
+    attempt nor a (slower) native fallback can produce a visible
+    result."""
+
+
+# ----------------------------------------------------- fault injection
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One injected fault decision.  ``kind`` is one of
+    :data:`FaultInjector.KINDS`; ``latency_s`` is set for latency
+    spikes."""
+    kind: str
+    latency_s: float = 0.0
+
+
+class FaultInjector:
+    """Deterministic, seeded fault injection for the dispatch stack.
+
+    Each injection *site* (``"remote:3"``, ``"backend:device"``, ...)
+    owns an independent ``random.Random`` stream seeded from
+    ``(seed, site)``, so a given seed replays the same fault sequence
+    per site bit-for-bit regardless of what other sites do.  Sites call
+    :meth:`decide` once per unit of work; the returned fault (or None)
+    is a pure function of (seed, site, call index) plus any scripted
+    faults registered with :meth:`at`.
+
+    Fault kinds:
+
+    - ``"latency"`` — a latency spike: the site sleeps ``latency_s``
+      extra before serving.
+    - ``"error"``   — an error reply: the request fails with a
+      :class:`TransientError` without executing.
+    - ``"crash"``   — crash-before-reply: the work is lost and the
+      caller sees the same ``server_died`` signal a killed server
+      emits, but the server itself survives.
+    - ``"die"``     — server death mid-batch: the server marks itself
+      dead; its in-service and queued requests are re-queued by the
+      pool's retry path.
+    - ``"hang"``    — silent death: the server stops replying *and*
+      stops heartbeating without any error signal — only the
+      :class:`HeartbeatMonitor` (or straggler reissue) can detect it.
+
+    ``death_budget`` bounds the total ``die`` + ``hang`` faults across
+    all sites, so a storm cannot kill the last live server.
+    """
+
+    KINDS = ("error", "crash", "latency", "die", "hang")
+
+    def __init__(self, seed: int = 0, *,
+                 error_rate: float = 0.0,
+                 crash_rate: float = 0.0,
+                 latency_rate: float = 0.0,
+                 latency_s: float = 0.05,
+                 die_rate: float = 0.0,
+                 hang_rate: float = 0.0,
+                 death_budget: int = 1):
+        rates = {"error": error_rate, "crash": crash_rate,
+                 "latency": latency_rate, "die": die_rate,
+                 "hang": hang_rate}
+        for kind, r in rates.items():
+            if not 0.0 <= r <= 1.0:
+                raise ValueError(f"{kind}_rate must be in [0, 1], got {r!r}")
+        if sum(rates.values()) > 1.0:
+            raise ValueError(
+                f"fault rates must sum to <= 1.0, got {sum(rates.values())}")
+        self.seed = seed
+        self.rates = rates
+        self.latency_s = latency_s
+        self._death_budget = max(0, death_budget)
+        self._lock = threading.Lock()
+        self._streams: dict[str, random.Random] = {}
+        self._calls: dict[str, int] = {}
+        self._scripted: dict[tuple[str, int], Fault] = {}
+        self.decisions = 0
+        self.injected = {k: 0 for k in self.KINDS}
+        self.suppressed_deaths = 0
+
+    def at(self, site: str, call_index: int, kind: str,
+           latency_s: float | None = None) -> "FaultInjector":
+        """Script an exact fault: the ``call_index``-th :meth:`decide`
+        at ``site`` (0-based) returns ``kind`` regardless of the random
+        stream.  Returns self for chaining."""
+        if kind not in self.KINDS:
+            raise ValueError(f"unknown fault kind {kind!r}; "
+                             f"known: {self.KINDS}")
+        with self._lock:
+            self._scripted[(site, call_index)] = Fault(
+                kind, latency_s if latency_s is not None else self.latency_s)
+        return self
+
+    def _draw_locked(self, site: str) -> Optional[Fault]:
+        rng = self._streams.get(site)
+        if rng is None:
+            # string seeding is version-2 deterministic (unlike hash())
+            rng = self._streams[site] = random.Random(f"{self.seed}/{site}")
+        u = rng.random()
+        edge = 0.0
+        for kind in self.KINDS:
+            edge += self.rates[kind]
+            if u < edge:
+                return Fault(kind, self.latency_s)
+        return None
+
+    def decide(self, site: str) -> Optional[Fault]:
+        """The fault to inject for this unit of work at ``site``, or
+        None.  Thread-safe; one deterministic stream per site."""
+        with self._lock:
+            idx = self._calls.get(site, 0)
+            self._calls[site] = idx + 1
+            self.decisions += 1
+            fault = self._scripted.pop((site, idx), None)
+            if fault is None:
+                fault = self._draw_locked(site)
+            if fault is not None and fault.kind in ("die", "hang"):
+                if self._death_budget <= 0:
+                    self.suppressed_deaths += 1
+                    return None
+                self._death_budget -= 1
+            if fault is not None:
+                self.injected[fault.kind] += 1
+            return fault
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"decisions": self.decisions,
+                    "injected": dict(self.injected),
+                    "suppressed_deaths": self.suppressed_deaths,
+                    "death_budget_left": self._death_budget}
 
 
 class HeartbeatMonitor:
@@ -26,6 +195,12 @@ class HeartbeatMonitor:
         self._last: dict[str, float] = {w: time.monotonic() for w in workers}
         self._dead: set[str] = set()
         self._lock = threading.Lock()
+
+    def register(self, worker: str):
+        """Add a worker after construction (elastic scale-out)."""
+        with self._lock:
+            self._dead.discard(worker)
+            self._last[worker] = time.monotonic()
 
     def beat(self, worker: str):
         with self._lock:
@@ -49,6 +224,11 @@ class HeartbeatMonitor:
         with self._lock:
             return [w for w in self._last if w not in self._dead]
 
+    def last_beats(self) -> dict[str, float]:
+        """Snapshot of each worker's last beat time (monotonic)."""
+        with self._lock:
+            return dict(self._last)
+
 
 class TrainSupervisor:
     """Checkpoint-every-N + restart-from-latest orchestration."""
@@ -59,12 +239,16 @@ class TrainSupervisor:
         self.keep = keep
 
     def maybe_save(self, step: int, state) -> str | None:
+        # deferred import: the query-path fault layer above must not pay
+        # for the checkpoint stack (jax serialization) at import time
+        from repro.checkpoint import save_checkpoint
         if step % self.save_every == 0 and step > 0:
             return save_checkpoint(self.ckpt_dir, step, state, keep=self.keep)
         return None
 
     def resume(self, template, shardings=None):
         """Returns (state, start_step); fresh start if no checkpoint."""
+        from repro.checkpoint import latest_step, restore_checkpoint
         step = latest_step(self.ckpt_dir)
         if step is None:
             return template, 0

@@ -526,6 +526,7 @@ class DeviceBackend(OffloadInboxMixin):
         settled by :meth:`_finalize_staged` after the next partition has
         been staged (double-buffering: h2d N+1 overlaps compute N)."""
         try:
+            self._maybe_fault()
             arrs = [np.asarray(e.data) for e in live]
             n = len(arrs)
             if n == 1:
@@ -589,6 +590,7 @@ class DeviceBackend(OffloadInboxMixin):
         t0 = self._clock()
         data = [e.data for e in live]
         try:
+            self._maybe_fault()
             for op in seg:
                 if has_device_udf(op.name):
                     data = get_device_udf(op.name)(list(data), **op.kwargs)
@@ -648,6 +650,7 @@ class DeviceBackend(OffloadInboxMixin):
         sig = op_signature(op)
         first_run = sig not in self._runs
         try:
+            self._maybe_fault()
             if has_device_udf(op.name):
                 t0 = self._clock()
                 results = get_device_udf(op.name)(
@@ -798,6 +801,17 @@ class MultiDeviceBackend:
     def shutdown(self, timeout: float = 5.0) -> None:
         for w in self.workers:
             w.shutdown(timeout)
+
+    @property
+    def fault_injector(self):
+        return self.workers[0].fault_injector
+
+    @fault_injector.setter
+    def fault_injector(self, fi) -> None:
+        # all workers share one injector: their draws interleave on the
+        # single "backend:device" site stream in submission order
+        for w in self.workers:
+            w.fault_injector = fi
 
     # --------------------------------------------------- Backend protocol
     def can_run(self, op) -> bool:

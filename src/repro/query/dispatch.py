@@ -151,6 +151,27 @@ class OffloadInboxMixin:
         self._thread: Optional[threading.Thread] = None
         self._closed = threading.Event()
         self._submit_gate = threading.Lock()
+        self.fault_injector = None   # set by the engine (chaos testing)
+
+    def _maybe_fault(self) -> None:
+        """Deterministic fault-injection hook for offload workers
+        (:class:`repro.distributed.fault.FaultInjector`, site
+        ``backend:<name>``): a latency fault sleeps here; every other
+        kind raises :class:`~repro.distributed.fault.TransientError`,
+        which the worker's existing per-entity error path reports — so
+        an injected fault degrades exactly like a real one."""
+        fi = self.fault_injector
+        if fi is None:
+            return
+        fault = fi.decide(f"backend:{self.name}")
+        if fault is None:
+            return
+        if fault.kind == "latency":
+            time.sleep(fault.latency_s)
+            return
+        from repro.distributed.fault import TransientError
+        raise TransientError(
+            f"injected {fault.kind} fault in {self.name} backend")
 
     def submit(self, entity) -> None:
         """Thread_3 hands an entity whose current op is routed here.
@@ -465,12 +486,20 @@ class BackendRouter:
     def __init__(self, backends: list[Backend], *,
                  overrides: dict | None = None,
                  handoff_s: float = 5e-4,
-                 tracker: OpCostTracker | None = None):
+                 tracker: OpCostTracker | None = None,
+                 health=None):
         self.backends = {b.name: b for b in backends}
         self.handoff_s = handoff_s
         self.overrides = validate_overrides(overrides,
                                             known=tuple(self.backends))
         self.tracker = tracker   # for payload propagation through chains
+        # optional HealthRegistry (repro.query.health): an OPEN breaker
+        # prices its backend at inf; otherwise costs scale by the
+        # error-EWMA penalty (exactly 1.0 while healthy, so enabling
+        # health tracking never perturbs a fault-free engine's routing).
+        # The penalty applies to overridden costs too — a pinned regime
+        # still drains away from a sick backend.
+        self.health = health
         self._lock = threading.Lock()
         self.placements = {b.name: 0 for b in backends}
         self.handoffs = 0
@@ -484,10 +513,17 @@ class BackendRouter:
         b = self.backends[backend]
         if not b.can_run(op):
             return _INF
+        if self.health is not None and not self.health.routable(backend):
+            return _INF
         ov = self.overrides.get(op.name)
         if ov is not None and backend in ov:
-            return float(ov[backend])
-        return b.estimate(op, payload_bytes)
+            return self._health_scaled(backend, float(ov[backend]))
+        return self._health_scaled(backend, b.estimate(op, payload_bytes))
+
+    def _health_scaled(self, backend: str, base: float) -> float:
+        if self.health is None:
+            return base
+        return base * self.health.penalty(backend)
 
     def cost_resident(self, op, backend: str, payload_bytes: int = 0) -> float:
         """Estimated seconds of ``op`` on ``backend`` when the previous
@@ -498,12 +534,15 @@ class BackendRouter:
         b = self.backends[backend]
         if not b.can_run(op):
             return _INF
+        if self.health is not None and not self.health.routable(backend):
+            return _INF
         ov = self.overrides.get(op.name)
         if ov is not None and backend in ov:
-            return float(ov[backend])
+            return self._health_scaled(backend, float(ov[backend]))
         if not getattr(b, "resident_capable", False):
-            return b.estimate(op, payload_bytes)
-        return b.estimate_resident(op, payload_bytes)
+            return self._health_scaled(backend, b.estimate(op, payload_bytes))
+        return self._health_scaled(backend,
+                                   b.estimate_resident(op, payload_bytes))
 
     # ----------------------------------------------------------- routing
     def route(self, ops, start: int = 0,
@@ -566,6 +605,11 @@ class BackendRouter:
         handoffs = sum(a != b for a, b in zip(chosen, chosen[1:]))
         for b_name, op in zip(chosen, ops[start:]):
             self.backends[b_name].note_placed(op)
+        if self.health is not None:
+            # a half-open breaker admits only a probe trickle: each
+            # routed chain that touches the backend consumes one slot
+            for b_name in set(chosen):
+                self.health.note_probe(b_name)
         with self._lock:
             self.chains_routed += 1
             self.handoffs += handoffs

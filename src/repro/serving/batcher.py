@@ -284,6 +284,7 @@ class UDFBatcherBackend(OffloadInboxMixin):
         from repro.core.udf import get_batched_udf
         t0 = self._clock()
         try:
+            self._maybe_fault()
             results = get_batched_udf(op.name)([e.data for e in live],
                                                **op.kwargs)
             if len(results) != len(live):
