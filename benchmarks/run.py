@@ -35,7 +35,9 @@ def main() -> None:
         suites["video"] = lambda: (video_suite.run_c1(6, 8)
                                    + video_suite.run_c2(6, 8)
                                    + video_suite.run_c3(4, 6, clients=(2, 4)))
-        suites["scaleout"] = lambda: scaleout.run((1, 2, 4, 8, 16, 32, 64))
+        # kappa remote-server curve + sharded-cluster shard curve +
+        # shard-off identity; also writes repo-root BENCH_scaleout.json
+        suites["scaleout"] = lambda: scaleout.run(smoke=False)
     else:
         suites["image"] = lambda: (
             image_suite.run_c1(16, queries=dict(list(
@@ -45,8 +47,7 @@ def main() -> None:
             video_suite.run_c1(3, 4, queries=dict(list(
                 video_suite.video_queries().items())[:3]))
             + video_suite.run_c2(3, 4) + video_suite.run_c3(2, 3, clients=(2,)))
-        suites["scaleout"] = lambda: scaleout.run((1, 2, 4, 8, 16),
-                                                  n_images=48, clients=2)
+        suites["scaleout"] = lambda: scaleout.run(smoke=True)
     suites["cputrace"] = lambda: cpu_trace.run()
     from benchmarks import serving_bench
     suites["serving"] = lambda: serving_bench.run()

@@ -1,0 +1,19 @@
+"""Sharded multi-engine cluster: consistent-hash entity partitioning
+with replicated failover behind the single-engine session API.
+
+- :class:`~repro.cluster.ring.HashRing` — stable consistent-hash ring
+  (virtual nodes, distinct-shard replica walks, minimal-movement
+  rebalance deltas).
+- :class:`~repro.cluster.engine.ShardedEngine` — N ``VDMSAsyncEngine``
+  shards behind ``submit()``/``execute()``; ``replica_factor=1`` (the
+  default) is byte-identical to a plain engine at ``num_shards=1``.
+- :class:`~repro.cluster.gather.ClusterFuture` /
+  :class:`~repro.cluster.gather.ClusterQuery` — the scatter/gather
+  state machine with streaming merge and replica failover.
+"""
+from repro.cluster.engine import ShardedEngine
+from repro.cluster.gather import ClusterFuture, ClusterQuery
+from repro.cluster.ring import HashRing, RingDelta
+
+__all__ = ["ShardedEngine", "ClusterFuture", "ClusterQuery",
+           "HashRing", "RingDelta"]

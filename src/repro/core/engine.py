@@ -429,8 +429,9 @@ class VDMSAsyncEngine:
         self._shut = False
 
     # ------------------------------------------------------------ ingest
-    def add_entity(self, kind: str, data, properties: dict) -> str:
-        return self.planner.ingest(kind, data, properties)
+    def add_entity(self, kind: str, data, properties: dict, *,
+                   eid: str | None = None) -> str:
+        return self.planner.ingest(kind, data, properties, eid=eid)
 
     # ------------------------------------------------------------- query
     def submit(self, query: list[dict] | dict, *,

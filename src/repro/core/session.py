@@ -262,6 +262,21 @@ class QuerySession:
             raise self._exc
         return self._result
 
+    def outcome(self) -> tuple[str, Any]:
+        """Non-blocking terminal-state snapshot:
+        ``("done", result)`` / ``("error", exc)`` / ``("cancelled",
+        None)`` / ``("running", None)``.  The cluster gather layer reads
+        this from done-callbacks to classify a shard sub-query's fate
+        without the raise/except round-trip of :meth:`result`."""
+        with self._cv:
+            if self._state is _RUNNING:
+                return ("running", None)
+            if self._state is _CANCELLED:
+                return ("cancelled", None)
+            if self._exc is not None:
+                return ("error", self._exc)
+            return ("done", self._result)
+
     def sync_overload(self) -> Optional[OverloadError]:
         """The :class:`OverloadError` this session failed with, if any —
         read by ``engine.submit()`` right after the synchronous phase-0
@@ -323,6 +338,11 @@ class QueryFuture:
         if self._session.is_cancelled:
             raise CancelledError(f"query {self.query_id} cancelled")
         return self._session._exc
+
+    def outcome(self) -> tuple[str, Any]:
+        """Non-blocking ``("done", result) | ("error", exc) |
+        ("cancelled", None) | ("running", None)`` snapshot."""
+        return self._session.outcome()
 
     def add_done_callback(self, fn: Callable[["QueryFuture"], None]):
         self._session.add_done_callback(lambda: fn(self))

@@ -1,25 +1,36 @@
-"""Elastic re-meshing: continue training/serving after the device pool
-changes (node failure shrinks it; recovery/scale-up grows it).
+"""Elastic topology changes: continue after the worker pool grows or
+shrinks (node failure shrinks it; recovery/scale-up grows it).
 
-``remesh_tree`` re-lays a sharded pytree onto a new mesh by re-deriving
-every leaf's NamedSharding from the same logical axes under the new mesh
-(divisibility-demoted where the new axis sizes require) and
-``device_put``-ing across.  Combined with the atomic checkpoints this is
-the restart path: resume(ckpt) -> remesh to the surviving topology ->
-continue.  The engine-side analogue (scaling the remote-server pool) is
-``RemoteServerPool.scale_to``.
+Two layers share this module:
+
+- **Device meshes** (training/serving): ``remesh_tree`` re-lays a
+  sharded pytree onto a new mesh by re-deriving every leaf's
+  NamedSharding from the same logical axes under the new mesh
+  (divisibility-demoted where the new axis sizes require) and
+  ``device_put``-ing across.  Combined with the atomic checkpoints this
+  is the restart path: resume(ckpt) -> remesh to the surviving topology
+  -> continue.  jax is imported lazily so the engine-side users below
+  never pay for (or require) the device stack.
+
+- **Engine shards** (query path): :func:`migration_moves` is the pure
+  planning half of a cluster rebalance — given each key's owner list
+  under the old and new consistent-hash ring, it yields the minimal
+  copy/drop set per moved key.  ``repro.cluster.ShardedEngine`` executes
+  the plan through its ordinary Add/remove paths; the remote-pool
+  analogue is ``RemoteServerPool.scale_to``.
 """
 from __future__ import annotations
 
-from typing import Any
-
-import jax
-
-from repro.distributed.sharding import LogicalRules, tree_to_shardings
+import dataclasses
+from typing import Any, Callable, Iterable, Iterator, Sequence
 
 
-def remesh_tree(tree: Any, axes_tree: Any, new_mesh, rules: LogicalRules):
+def remesh_tree(tree: Any, axes_tree: Any, new_mesh, rules):
     """Re-shard ``tree`` (same structure as ``axes_tree``) onto ``new_mesh``."""
+    import jax
+
+    from repro.distributed.sharding import tree_to_shardings
+
     shardings = tree_to_shardings(tree, axes_tree, new_mesh, rules)
     return jax.device_put(tree, shardings)
 
@@ -30,3 +41,44 @@ def shrink_batch_for_mesh(global_batch: int, mesh) -> int:
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     dp = sizes.get("data", 1) * sizes.get("pod", 1)
     return max((global_batch // dp) * dp, dp)
+
+
+# ------------------------------------------------- shard-set rebalance
+@dataclasses.dataclass(frozen=True)
+class Move:
+    """One key's rebalance delta.  ``copy_to`` shards need a fresh copy
+    (read from any surviving old holder), ``drop_from`` shards shed
+    theirs, and a primary change means surviving copies must re-tag
+    their owner property."""
+    key: str
+    copy_to: tuple
+    drop_from: tuple
+    old_primary: Any
+    new_primary: Any
+
+    @property
+    def primary_changed(self) -> bool:
+        return self.old_primary != self.new_primary
+
+
+def migration_moves(keys: Iterable[str],
+                    old_owners: Callable[[str], Sequence],
+                    new_owners: Callable[[str], Sequence]) -> Iterator[Move]:
+    """Plan the minimal data movement for a shard join/leave.
+
+    ``old_owners`` / ``new_owners`` map a key to its ordered owner list
+    (primary first) under the pre- and post-rebalance topology.  Only
+    keys whose owner list changed produce a :class:`Move`; the
+    consistent-hash ring guarantees that set is the minimal range
+    adjacent to the changed shard, and this function never moves more
+    than the delta."""
+    for key in keys:
+        old = list(old_owners(key))
+        new = list(new_owners(key))
+        if old == new:
+            continue
+        yield Move(key=key,
+                   copy_to=tuple(s for s in new if s not in old),
+                   drop_from=tuple(s for s in old if s not in new),
+                   old_primary=old[0] if old else None,
+                   new_primary=new[0] if new else None)

@@ -60,6 +60,17 @@ class DeadlineExceeded(PermanentError):
     result."""
 
 
+class ShardLostError(TransientError):
+    """An engine shard died holding the only copy of its key range
+    (``replica_factor=1``, or every replica holder is down too).
+    Transient — the shard can be replaced and re-fed — but the query
+    that needed those entities cannot be completed now; the cluster
+    scatter fails the affected query with this instead of hanging on a
+    barrier that will never drain.  With ``replica_factor >= 2`` the
+    gather layer re-drives the dead shard's work on the replica holders
+    and the client never sees this error."""
+
+
 # ----------------------------------------------------- fault injection
 @dataclasses.dataclass(frozen=True)
 class Fault:

@@ -165,10 +165,30 @@ class HealthRegistry:
 
     def __init__(self, names, *, never_open=("native",),
                  clock=time.monotonic, **breaker_kwargs):
-        self._breakers = {
-            n: CircuitBreaker(n, can_open=n not in never_open,
-                              clock=clock, **breaker_kwargs)
-            for n in names}
+        self._never_open = tuple(never_open)
+        self._clock = clock
+        self._breaker_kwargs = dict(breaker_kwargs)
+        self._breakers = {}
+        for n in names:
+            self.register(n)
+
+    def register(self, name: str) -> CircuitBreaker:
+        """Add a breaker for a backend that joined after construction
+        (cluster shard join), built with the registry's own breaker
+        parameters so every member runs the same health policy.
+        Idempotent: an existing breaker (and its accumulated EWMAs) is
+        kept."""
+        b = self._breakers.get(name)
+        if b is None:
+            b = CircuitBreaker(name, can_open=name not in self._never_open,
+                               clock=self._clock, **self._breaker_kwargs)
+            self._breakers[name] = b
+        return b
+
+    def remove(self, name: str):
+        """Forget a departed backend's breaker (cluster shard leave);
+        unknown names answer neutrally again afterwards."""
+        self._breakers.pop(name, None)
 
     def get(self, name: str) -> CircuitBreaker | None:
         return self._breakers.get(name)

@@ -36,6 +36,8 @@ class Command:
     data: Any = None
     limit: int | None = None
     name: str = ""                 # original command name (plan display)
+    eid: str | None = None         # Add only: caller-assigned entity id
+                                   # (cluster ingest; None = store-assigned)
 
 
 def parse_query(q: list[dict]) -> list[Command]:
@@ -59,5 +61,6 @@ def parse_query(q: list[dict]) -> list[Command]:
             data=body.get("data"),
             limit=body.get("limit"),
             name=name,
+            eid=body.get("eid") if verb == "add" else None,
         ))
     return cmds

@@ -55,6 +55,21 @@ class MetadataStore:
                 if isinstance(v, (str, int, bool)):
                     self._eq_index[k][v].add(eid)
 
+    def remove(self, eid: str) -> bool:
+        """Drop an entity's row and index entries (cluster rebalance:
+        a shard that no longer owns a key range sheds its copies).
+        Returns whether the eid existed."""
+        with self._lock:
+            props = self._props.pop(eid, None)
+            if props is None:
+                return False
+            self._kind.pop(eid, None)
+            for k, v in props.items():
+                if isinstance(v, (str, int, bool)):
+                    self._eq_index[k][v].discard(eid)
+            self._edges.pop(eid, None)
+            return True
+
     def connect(self, src: str, rel: str, dst: str):
         with self._lock:
             self._edges[src].append((rel, dst))

@@ -71,6 +71,28 @@ class QueryPlan:
         return sum(len(p) for p in self.phases)
 
 
+def group_phases(cmds: list[Command]) -> list[list[int]]:
+    """Command indices grouped into barrier phases: consecutive Finds
+    run concurrently, each Add is the sole member of its phase.  The
+    single source of phase semantics — used by :meth:`QueryPlanner.compile`
+    and by the cluster scatter (``repro.cluster``), which must launch
+    the SAME barriers across shards that a single engine would honor
+    locally."""
+    phases: list[list[int]] = []
+    current: list[int] = []
+    for i, cmd in enumerate(cmds):
+        if cmd.verb == "add":
+            if current:
+                phases.append(current)
+                current = []
+            phases.append([i])
+        else:
+            current.append(i)
+    if current:
+        phases.append(current)
+    return phases
+
+
 class QueryPlanner:
     """Compiles commands to phases and expands per-command entity fan-out."""
 
@@ -84,26 +106,20 @@ class QueryPlanner:
 
     # ----------------------------------------------------------- compile
     def compile(self, cmds: list[Command]) -> QueryPlan:
-        phases: list[list[CommandPlan]] = []
-        current: list[CommandPlan] = []
-        for i, cmd in enumerate(cmds):
-            if cmd.verb == "add":
-                if current:
-                    phases.append(current)
-                    current = []
-                phases.append([CommandPlan(index=i, command=cmd)])
-            else:
-                current.append(CommandPlan(index=i, command=cmd))
-        if current:
-            phases.append(current)
-        return QueryPlan(phases=phases)
+        return QueryPlan(phases=[
+            [CommandPlan(index=i, command=cmds[i]) for i in phase]
+            for phase in group_phases(cmds)])
 
     # ------------------------------------------------------------ ingest
-    def ingest(self, kind: str, data, properties: dict) -> str:
+    def ingest(self, kind: str, data, properties: dict,
+               eid: str | None = None) -> str:
         """The single ingestion path: metadata row + blob.  Used both by
         the engine's ``add_entity`` and by Add-command expansion, so
-        ingestion changes apply to each identically."""
-        eid = self.meta.add(kind, properties)
+        ingestion changes apply to each identically.  ``eid`` pins the
+        entity id (cluster ingest assigns ids at the ring level so a
+        1-shard cluster's ids match a plain engine's); ``None`` keeps
+        the store-assigned counter id."""
+        eid = self.meta.add(kind, properties, eid=eid)
         self.store.put(eid, np.asarray(data))
         if self.result_cache is not None:
             # Add barrier invalidation: any cached result keyed on this
@@ -144,7 +160,8 @@ class QueryPlanner:
         bypasses the result cache for both reads and writes."""
         cmd = cplan.command
         if cmd.verb == "add":
-            eids = [self.ingest(cmd.kind, cmd.data, cmd.properties)]
+            eids = [self.ingest(cmd.kind, cmd.data, cmd.properties,
+                                eid=cmd.eid)]
         else:
             eids = self.meta.find(cmd.kind, cmd.constraints)
             if cmd.limit:

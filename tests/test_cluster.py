@@ -1,0 +1,374 @@
+"""Sharded multi-engine cluster (PR 8): cross-shard byte-identity with
+the plain engine, scatter/gather ordering, mixed Add/Find barriers,
+cancellation/timeout dropping work on every shard, replica failover
+under a seeded kill-a-shard chaos storm, and ring rebalance migration."""
+import threading
+import time
+from concurrent.futures import CancelledError
+
+import numpy as np
+import pytest
+
+from repro.cluster import ShardedEngine
+from repro.core.engine import VDMSAsyncEngine
+from repro.core.remote import TransportModel
+from repro.distributed.fault import ShardLostError
+from repro.query.admission import OverloadError
+
+FAST = TransportModel(network_latency_s=0.001, service_time_s=0.002)
+SLOW = TransportModel(network_latency_s=0.001, service_time_s=0.03)
+
+PIPE = [
+    {"type": "crop", "x": 2, "y": 2, "width": 12, "height": 12},
+    {"type": "remote", "url": "u", "options": {"id": "flip"}},
+    {"type": "rotate", "k": 1},
+]
+
+
+def _fill(eng, n=10, size=16, category="cl", seed=11):
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        img = rng.uniform(0, 1, (size, size, 3)).astype(np.float32)
+        eng.add_entity("image", img, {"category": category, "idx": i})
+
+
+def _find(category="cl", ops=PIPE, **extra):
+    return [{"FindImage": {"constraints": {"category": ["==", category]},
+                           "operations": ops, **extra}}]
+
+
+def _strip(stats):
+    return {k: v for k, v in stats.items() if k != "duration_s"}
+
+
+def _assert_same_response(a, b):
+    """Bit-for-bit apart from wall-clock: same eids in the same order,
+    same bytes/shape/dtype per entity, same stats."""
+    assert list(a["entities"]) == list(b["entities"])
+    for eid in a["entities"]:
+        x, y = a["entities"][eid], b["entities"][eid]
+        assert x.shape == y.shape and x.dtype == y.dtype
+        assert x.tobytes() == y.tobytes()
+    assert _strip(a["stats"]) == _strip(b["stats"])
+
+
+# ------------------------------------------------- cross-shard identity
+def test_one_shard_cluster_is_byte_identical_to_plain_engine():
+    plain = VDMSAsyncEngine(num_remote_servers=2, transport=FAST)
+    clustered = ShardedEngine(num_shards=1, num_remote_servers=2,
+                              transport=FAST)
+    try:
+        _fill(plain)
+        _fill(clustered)
+        for q in (_find(), _find(ops=[]), _find(limit=4)):
+            _assert_same_response(plain.execute(q, timeout=60),
+                                  clustered.execute(q, timeout=60))
+    finally:
+        plain.shutdown()
+        clustered.shutdown()
+
+
+def test_cluster_eids_match_plain_engine_counter():
+    # cluster-level id assignment reproduces the single store's
+    # "{kind}-{n}" sequence, shared across kinds
+    plain = VDMSAsyncEngine(transport=FAST)
+    clustered = ShardedEngine(num_shards=3, transport=FAST)
+    try:
+        rng = np.random.default_rng(0)
+        img = rng.uniform(0, 1, (8, 8, 3)).astype(np.float32)
+        for kind in ("image", "video", "image"):
+            assert (plain.add_entity(kind, img, {}) ==
+                    clustered.add_entity(kind, img, {}))
+    finally:
+        plain.shutdown()
+        clustered.shutdown()
+
+
+@pytest.mark.parametrize("num_shards", [2, 4])
+def test_multi_shard_response_matches_plain_engine(num_shards):
+    # assembly is (command order x sorted-eid order) regardless of which
+    # shard finishes first, so the scatter must be invisible in results
+    plain = VDMSAsyncEngine(num_remote_servers=2, transport=FAST)
+    clustered = ShardedEngine(num_shards=num_shards, num_remote_servers=2,
+                              transport=FAST)
+    try:
+        _fill(plain, n=14)
+        _fill(clustered, n=14)
+        for q in (_find(), _find(limit=5)):
+            _assert_same_response(plain.execute(q, timeout=60),
+                                  clustered.execute(q, timeout=60))
+    finally:
+        plain.shutdown()
+        clustered.shutdown()
+
+
+def test_replicated_cluster_results_unchanged():
+    # replica_factor is a durability knob, not a semantics knob
+    a = ShardedEngine(num_shards=3, replica_factor=1, transport=FAST)
+    b = ShardedEngine(num_shards=3, replica_factor=2, transport=FAST)
+    try:
+        _fill(a)
+        _fill(b)
+        _assert_same_response(a.execute(_find(), timeout=60),
+                              b.execute(_find(), timeout=60))
+        held = sum(v["held"] for v in
+                   b.cluster_stats()["per_shard"].values())
+        assert held == 2 * 10       # every entity stored on two shards
+    finally:
+        a.shutdown()
+        b.shutdown()
+
+
+# ------------------------------------------------ scatter/gather order
+def test_streaming_gather_dedupes_and_covers_every_entity():
+    eng = ShardedEngine(num_shards=3, replica_factor=2, transport=FAST)
+    try:
+        _fill(eng, n=12)
+        seen = []
+        lock = threading.Lock()
+
+        def on_entity(ent):
+            with lock:
+                seen.append(ent.eid)
+        res = eng.submit(_find(), on_entity=on_entity).result(timeout=60)
+        assert sorted(seen) == sorted(res["entities"])   # once each,
+        assert len(seen) == len(set(seen))               # despite replicas
+    finally:
+        eng.shutdown()
+
+
+def test_mixed_add_find_barrier_across_shards():
+    # the Add is a barrier: the Find phase scatters only after every
+    # replica holder ingested, so it must match the new entity
+    eng = ShardedEngine(num_shards=3, replica_factor=2, transport=FAST)
+    try:
+        _fill(eng, n=6)
+        img = np.full((16, 16, 3), 0.25, np.float32)
+        q = [{"AddImage": {"properties": {"category": "cl", "idx": 99},
+                           "data": img}},
+             {"FindImage": {"constraints": {"category": ["==", "cl"]}}}]
+        res = eng.execute(q, timeout=60)
+        assert len(res["entities"]) == 7
+        assert res["stats"]["matched"] == 7
+        new_eid = [e for e in res["entities"] if e.endswith("-6")][0]
+        np.testing.assert_array_equal(res["entities"][new_eid], img)
+        # and the plain engine agrees bit-for-bit on the same program
+        plain = VDMSAsyncEngine(transport=FAST)
+        try:
+            _fill(plain, n=6)
+            _assert_same_response(plain.execute(q, timeout=60), res)
+        finally:
+            plain.shutdown()
+    finally:
+        eng.shutdown()
+
+
+def test_add_with_operations_processes_on_every_replica():
+    # an Add pipeline runs per copy; deterministic ops keep the copies
+    # identical, and the response carries the processed data
+    eng = ShardedEngine(num_shards=3, replica_factor=2, transport=FAST)
+    try:
+        img = np.full((8, 8, 3), 2.0, np.float32)
+        q = [{"AddImage": {"properties": {"category": "cl"}, "data": img,
+                           "operations": [{"type": "threshold",
+                                           "value": 0.5}]}}]
+        res = eng.execute(q, timeout=60)
+        (eid, out), = res["entities"].items()
+        np.testing.assert_array_equal(out, np.ones_like(img))
+        live = eng.live_shards()
+        holders = [s for s in live if eid in eng.shards[s].store]
+        assert len(holders) == 2
+        for s in holders:
+            np.testing.assert_array_equal(eng.shards[s].store.get(eid),
+                                          np.ones_like(img))
+    finally:
+        eng.shutdown()
+
+
+# --------------------------------------- cancellation / timeout drops
+def test_cancel_drops_work_on_every_shard_without_admission_leaks():
+    eng = ShardedEngine(num_shards=3, num_remote_servers=1, transport=SLOW,
+                        admission="queue", max_inflight_entities=4)
+    try:
+        _fill(eng, n=12)
+        fut = eng.submit(_find())
+        time.sleep(0.05)              # let the scatter reach the shards
+        assert fut.cancel()
+        assert fut.cancelled()
+        with pytest.raises(CancelledError):
+            fut.result(timeout=5)
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline:
+            adm = eng.admission_stats().values()
+            if all(a["inflight"] == 0 and a["pending"] == 0 for a in adm):
+                break
+            time.sleep(0.01)
+        for sid, a in eng.admission_stats().items():
+            assert a["inflight"] == 0 and a["pending"] == 0, (sid, a)
+            assert a["peak_inflight"] <= 4
+    finally:
+        eng.shutdown()
+
+
+def test_execute_timeout_cancels_across_shards():
+    eng = ShardedEngine(num_shards=3, num_remote_servers=1, transport=SLOW,
+                        admission="queue", max_inflight_entities=4)
+    try:
+        _fill(eng, n=12)
+        with pytest.raises(TimeoutError):
+            eng.execute(_find(), timeout=0.05)
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline:
+            adm = eng.admission_stats().values()
+            if all(a["inflight"] == 0 and a["pending"] == 0 for a in adm):
+                break
+            time.sleep(0.01)
+        for sid, a in eng.admission_stats().items():
+            assert a["inflight"] == 0 and a["pending"] == 0, (sid, a)
+    finally:
+        eng.shutdown()
+
+
+def test_shed_shard_overload_propagates_to_submit():
+    # admission back-pressure is NOT ill health: no failover, the typed
+    # OverloadError surfaces from submit() exactly like a plain engine
+    eng = ShardedEngine(num_shards=2, num_remote_servers=1, transport=SLOW,
+                        admission="shed", max_inflight_entities=2)
+    try:
+        _fill(eng, n=12)
+        with pytest.raises(OverloadError) as ei:
+            for _ in range(6):
+                eng.submit(_find())
+        assert ei.value.retry_after_s >= 0
+        assert eng.cluster_stats()["failovers_total"] == 0
+    finally:
+        eng.shutdown()
+
+
+# ----------------------------------------------------- replica failover
+def test_kill_shard_mid_query_redrives_on_replicas():
+    eng = ShardedEngine(num_shards=3, replica_factor=2,
+                        num_remote_servers=1, transport=SLOW)
+    try:
+        _fill(eng, n=12)
+        fut = eng.submit(_find())
+        time.sleep(0.02)
+        eng.kill_shard(1)
+        res = fut.result(timeout=60)
+        assert len(res["entities"]) == 12
+        assert res["stats"]["failed"] == 0
+        st = eng.cluster_stats()
+        assert st["live_shards"] == [0, 2]
+        assert st["failovers_total"] >= 1
+        assert st["failovers"].get(1, 0) >= 1
+        # and later queries keep working against the survivors
+        res2 = eng.execute(_find(), timeout=60)
+        assert len(res2["entities"]) == 12
+        assert res2["stats"]["failed"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_shard_loss_without_replicas_fails_loudly():
+    eng = ShardedEngine(num_shards=2, replica_factor=1,
+                        num_remote_servers=1, transport=SLOW)
+    try:
+        _fill(eng, n=8)
+        fut = eng.submit(_find())
+        time.sleep(0.02)
+        eng.kill_shard(0)
+        with pytest.raises(ShardLostError):
+            fut.result(timeout=60)
+    finally:
+        eng.shutdown()
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_chaos_storm_kill_one_shard_completes_every_query(seed):
+    """The seeded kill-a-shard storm: at replica_factor=2 every future
+    resolves, zero failed entities, failover counted in cluster_stats."""
+    rng = np.random.default_rng(seed)
+    n_images, n_queries = 8, 3
+    eng = ShardedEngine(num_shards=3, replica_factor=2,
+                        num_remote_servers=1,
+                        transport=TransportModel(network_latency_s=0.001,
+                                                 service_time_s=0.015))
+    try:
+        _fill(eng, n=n_images, seed=seed)
+        futs = [eng.submit(_find()) for _ in range(n_queries)]
+        time.sleep(float(rng.uniform(0.005, 0.04)))
+        victim = int(rng.integers(0, 3))
+        eng.kill_shard(victim)
+        for fut in futs:
+            res = fut.result(timeout=120)
+            assert len(res["entities"]) == n_images
+            assert res["stats"]["failed"] == 0
+        st = eng.cluster_stats()
+        assert st["failovers_total"] >= 1
+        assert victim not in st["live_shards"]
+    finally:
+        eng.shutdown()
+
+
+# -------------------------------------------------- rebalance migration
+def test_shard_join_and_leave_preserve_results_and_move_minimally():
+    eng = ShardedEngine(num_shards=2, replica_factor=2, virtual_nodes=64,
+                        transport=FAST)
+    try:
+        _fill(eng, n=24)
+        q = _find(ops=[])
+        base = eng.execute(q, timeout=60)
+        assert len(base["entities"]) == 24
+        before = eng.cluster_stats()
+
+        sid = eng.add_shard()
+        after_join = eng.cluster_stats()
+        assert sid in after_join["live_shards"]
+        _assert_same_response(base, eng.execute(q, timeout=60))
+        # the join moved only the new shard's ranges: the copies it
+        # received, bounded well below a full reshuffle of 2x24 copies
+        moved = after_join["moved_entities"] - before["moved_entities"]
+        assert 0 < moved <= eng.shards[sid].meta.count() + 24
+        held = sum(v["held"] for v in after_join["per_shard"].values())
+        assert held == 2 * 24       # replica invariant survives the join
+
+        eng.remove_shard(0)
+        after_leave = eng.cluster_stats()
+        assert 0 not in after_leave["live_shards"]
+        _assert_same_response(base, eng.execute(q, timeout=60))
+        held = sum(v["held"] for v in after_leave["per_shard"].values())
+        assert held == 2 * 24
+    finally:
+        eng.shutdown()
+
+
+def test_cluster_stats_shapes():
+    eng = ShardedEngine(num_shards=4, replica_factor=2, virtual_nodes=128,
+                        transport=FAST)
+    try:
+        _fill(eng, n=40)
+        st = eng.cluster_stats()
+        assert st["num_shards"] == 4 and st["replica_factor"] == 2
+        assert st["entities"] == 40
+        assert sum(v["owned"] for v in st["per_shard"].values()) == 40
+        assert st["imbalance"] >= 1.0
+        assert set(st["breakers"]) == {f"shard:{i}" for i in range(4)}
+    finally:
+        eng.shutdown()
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        ShardedEngine(num_shards=0)
+    with pytest.raises(ValueError):
+        ShardedEngine(num_shards=2, replica_factor=3)
+    with pytest.raises(ValueError):
+        ShardedEngine(num_shards=2, replica_factor=0)
+    with pytest.raises(ValueError):
+        ShardedEngine(num_shards=2, virtual_nodes=0)
+    eng = ShardedEngine(num_shards=2)
+    eng.shutdown()
+    with pytest.raises(RuntimeError):
+        eng.submit(_find())
+    with pytest.raises(RuntimeError):
+        eng.add_entity("image", np.zeros((2, 2, 3)), {})

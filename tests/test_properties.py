@@ -266,3 +266,86 @@ def test_safe_spec_divisibility(dim0, dim1):
     mesh = jax.make_mesh((1,), ("model",))
     spec = safe_spec((dim0, dim1), ("embed", "ff"), default_rules(), mesh)
     assert isinstance(spec, P)  # 1-device mesh: everything divides
+
+
+# -------------------------------------------------- consistent-hash ring
+ring_shards_st = st.integers(2, 8)
+ring_vnodes_st = st.sampled_from([64, 96, 128])
+
+
+@SET
+@given(ring_shards_st, ring_vnodes_st, st.integers(0, 1000))
+def test_ring_balance_within_bound(n_shards, vnodes, key_base):
+    from repro.cluster.ring import HashRing
+
+    ring = HashRing(range(n_shards), virtual_nodes=vnodes)
+    keys = [f"image-{key_base + i}" for i in range(256)]
+    counts = ring.ownership(keys)
+    mean = len(keys) / n_shards
+    # >= 64 vnodes keeps the heaviest shard within a constant factor of
+    # the mean (the slack term absorbs small-sample noise at 8 shards)
+    assert max(counts.values()) <= 2.5 * mean + 8
+
+
+@SET
+@given(ring_shards_st, ring_vnodes_st, st.integers(1, 2), st.integers(0, 500))
+def test_ring_join_moves_only_ranges_adjacent_to_new_shard(
+        n_shards, vnodes, rf, key_base):
+    from repro.cluster.ring import HashRing
+
+    rf = min(rf, n_shards)
+    ring = HashRing(range(n_shards), virtual_nodes=vnodes)
+    keys = [f"image-{key_base + i}" for i in range(200)]
+    delta = ring.rebalance(add=n_shards)
+    for k in keys:
+        old = delta.old_owners(k, rf)
+        new = delta.new_owners(k, rf)
+        if old != new:
+            # minimal movement: a changed owner list always involves the
+            # joining shard, and the survivors keep their relative order
+            # — nothing reshuffles between pre-existing shards
+            assert n_shards in new
+            assert [s for s in new if s != n_shards] == old[: rf - 1]
+
+
+@SET
+@given(ring_shards_st, ring_vnodes_st, st.integers(0, 500))
+def test_ring_leave_moves_only_departed_shards_keys(n_shards, vnodes,
+                                                    key_base):
+    from repro.cluster.ring import HashRing
+
+    ring = HashRing(range(n_shards), virtual_nodes=vnodes)
+    keys = [f"image-{key_base + i}" for i in range(200)]
+    victim = key_base % n_shards
+    delta = ring.rebalance(remove=victim)
+    for k in keys:
+        old = delta.old_owners(k, 1)
+        new = delta.new_owners(k, 1)
+        if old != new:
+            assert old == [victim]      # only the departed shard's keys move
+        else:
+            assert old[0] != victim
+
+
+@SET
+@given(ring_shards_st, ring_vnodes_st, st.integers(0, 1000))
+def test_ring_replica_always_on_distinct_shard(n_shards, vnodes, key_base):
+    from repro.cluster.ring import HashRing
+
+    ring = HashRing(range(n_shards), virtual_nodes=vnodes)
+    for i in range(64):
+        owners = ring.owners(f"image-{key_base + i}", 2)
+        assert len(owners) == min(2, n_shards)
+        assert len(set(owners)) == len(owners)
+
+
+@SET
+@given(ring_vnodes_st, st.integers(0, 1000))
+def test_ring_lookup_is_stable_and_insertion_order_free(vnodes, key_base):
+    from repro.cluster.ring import HashRing
+
+    a = HashRing([0, 1, 2, 3], virtual_nodes=vnodes)
+    b = HashRing([3, 1, 0, 2], virtual_nodes=vnodes)
+    for i in range(64):
+        k = f"image-{key_base + i}"
+        assert a.owners(k, 2) == b.owners(k, 2)
