@@ -129,11 +129,13 @@ class ShardedEngine:
     def submit(self, query, *,
                on_entity: Optional[Callable] = None,
                cache: bool = True, priority: int = 0,
-               timeout_s: Optional[float] = None) -> ClusterFuture:
+               timeout_s: Optional[float] = None,
+               tenant: str = "") -> ClusterFuture:
         """Submit a VDMS JSON query against the cluster; same contract
         as ``VDMSAsyncEngine.submit`` (future, streaming callbacks,
-        cache opt-out, priority, deadline) with the scatter/gather and
-        failover semantics of ``repro.cluster.gather``."""
+        cache opt-out, priority, deadline, admission tenant) with the
+        scatter/gather and failover semantics of
+        ``repro.cluster.gather``."""
         if self._shut:
             raise RuntimeError("engine is shut down")
         cmds = parse_query(query)            # validate before any scatter
@@ -145,7 +147,7 @@ class ShardedEngine:
         qid = str(next(self._qid))
         cq = ClusterQuery(qid, raw, cmds, self, on_entity=on_entity,
                           use_cache=cache, priority=priority,
-                          timeout_s=timeout_s)
+                          timeout_s=timeout_s, tenant=tenant)
         fut = ClusterFuture(cq)
         with self._lock:
             if self._shut:

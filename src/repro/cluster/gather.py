@@ -79,7 +79,7 @@ class ClusterQuery:
                  cmds, engine,
                  on_entity: Optional[Callable] = None,
                  use_cache: bool = True, priority: int = 0,
-                 timeout_s: Optional[float] = None):
+                 timeout_s: Optional[float] = None, tenant: str = ""):
         self.qid = qid
         self._raw = raw_cmds           # [(name, body)] in command order
         self._cmds = cmds              # parsed Commands (validation + verbs)
@@ -87,6 +87,7 @@ class ClusterQuery:
         self._on_entity = on_entity
         self.use_cache = use_cache
         self.priority = priority
+        self.tenant = tenant           # forwarded to every shard submit
         self._deadline = (time.monotonic() + timeout_s
                           if timeout_s is not None else None)
         self._cv = threading.Condition()
@@ -205,7 +206,7 @@ class ClusterQuery:
                 piece.shard_sid, [{piece.name: piece.body}],
                 on_entity=self._make_stream(piece),
                 cache=self.use_cache, priority=self.priority,
-                timeout_s=remaining)
+                timeout_s=remaining, tenant=self.tenant)
         except Exception as e:  # noqa: BLE001 — classified below
             self._piece_failed(piece, e)
             return

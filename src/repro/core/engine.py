@@ -112,6 +112,16 @@ class VDMSAsyncEngine:
       is enabled).  ``admission_queue_cap``: bound on pending-lane
       entities; overflowing it sheds even under ``"queue"``.
       ``submit(..., priority=)`` orders the pending lane.
+      **Admission v2** (both require admission enabled; both off by
+      default): ``admission_tenants``: ``{tenant: weight}`` weighted
+      fair shares of the admission budget — ``submit(..., tenant=)``
+      names the lane, unlisted tenants weigh
+      ``admission_tenant_default_weight``, and the empty tenant
+      (plain in-process submits) is exempt.
+      ``admission_cost_aware`` + ``admission_cost_cap_s``: charge each
+      entity its estimated work-seconds (ops x the cost tracker's
+      calibrated mean) against a work-seconds budget instead of
+      counting raw entities.
 
     **Fault tolerance** (off by default; every default reproduces
     today's behavior bit-for-bit) —
@@ -170,6 +180,10 @@ class VDMSAsyncEngine:
                  admission: str = "none",
                  max_inflight_entities: int = 0,
                  admission_queue_cap: int = 1024,
+                 admission_tenants: dict | None = None,
+                 admission_tenant_default_weight: float = 1.0,
+                 admission_cost_aware: bool = False,
+                 admission_cost_cap_s: float = 0.0,
                  max_retries: int = 3,
                  retry_backoff_base_s: float = 0.0,
                  retry_backoff_max_s: float = 1.0,
@@ -192,12 +206,32 @@ class VDMSAsyncEngine:
             raise ValueError(
                 "max_inflight_entities requires admission='queue' or "
                 "'shed' (admission='none' never consults the cap)")
+        if admission == "none":
+            # admission-v2 knobs parameterize the controller only —
+            # with no controller they would be silently inert
+            for val, name, default in (
+                    (admission_tenants, "admission_tenants", None),
+                    (admission_tenant_default_weight,
+                     "admission_tenant_default_weight", 1.0),
+                    (admission_cost_aware, "admission_cost_aware", False),
+                    (admission_cost_cap_s, "admission_cost_cap_s", 0.0)):
+                if val != default:
+                    raise ValueError(
+                        f"{name} requires admission='queue' or 'shed' "
+                        f"(admission='none' builds no controller to "
+                        f"consult it)")
         # built pre-thread: a malformed admission knob (cap <= 0, bad
-        # queue cap) must raise before any pool/loop thread exists
+        # queue cap, malformed tenant table, cost knobs half-set) must
+        # raise before any pool/loop thread exists
         self.admission_ctl = (
-            AdmissionController(max_inflight=max_inflight_entities,
-                                policy=admission,
-                                queue_cap=admission_queue_cap)
+            AdmissionController(
+                max_inflight=max_inflight_entities,
+                policy=admission,
+                queue_cap=admission_queue_cap,
+                tenant_weights=admission_tenants,
+                tenant_default_weight=admission_tenant_default_weight,
+                cost_aware=admission_cost_aware,
+                cost_cap_s=admission_cost_cap_s)
             if admission != "none" else None)
         self.admission = admission
         if dispatch not in ("static", "cost", "native"):
@@ -437,7 +471,8 @@ class VDMSAsyncEngine:
     def submit(self, query: list[dict] | dict, *,
                on_entity: Optional[Callable[[Entity], None]] = None,
                cache: bool = True, priority: int = 0,
-               timeout_s: Optional[float] = None) -> QueryFuture:
+               timeout_s: Optional[float] = None,
+               tenant: str = "") -> QueryFuture:
         """Submit a VDMS JSON query; returns immediately with a
         :class:`QueryFuture`.
 
@@ -470,7 +505,12 @@ class VDMSAsyncEngine:
         retries (and their backoff sleeps) never outlive it, so a
         retrying request cannot keep burning server capacity after the
         client's own ``result(timeout)`` would have given up.
-        ``execute(query, timeout)`` wires its timeout through here."""
+        ``execute(query, timeout)`` wires its timeout through here.
+
+        ``tenant`` names the admission-v2 quota lane the query charges
+        (``admission_tenants`` weighted fair shares); the default empty
+        tenant is exempt from quotas, and the knob is inert unless the
+        engine was built with a tenant table."""
         if self._shut:
             raise RuntimeError("engine is shut down")
         cmds = parse_query(query)
@@ -480,7 +520,7 @@ class VDMSAsyncEngine:
                     if timeout_s is not None else None)
         session = QuerySession(qid, plan, self, on_entity=on_entity,
                                use_cache=cache, priority=priority,
-                               deadline=deadline)
+                               deadline=deadline, tenant=tenant)
         fut = QueryFuture(session)     # built before launch: the return
         with self._session_lock:       # after start() is a single bytecode
             if self._shut:
@@ -523,7 +563,7 @@ class VDMSAsyncEngine:
         return self.planner.expand(cplan, qid, use_cache)
 
     def _admission_precheck(self, cplans, *, qid: str, first_phase: bool,
-                            use_cache: bool = True):
+                            use_cache: bool = True, tenant: str = ""):
         """Pre-expand overload gate, deciding before any expansion work
         happens.  It runs in exactly two situations:
 
@@ -549,20 +589,25 @@ class VDMSAsyncEngine:
         ctl = self.admission_ctl
         if ctl is None:
             return
+        # cost-aware admission charges per estimated op count: the
+        # widest command of the phase bounds the per-entity charge
+        n_ops = max((len(cp.command.operations) for cp in cplans),
+                    default=1)
         is_add_phase = any(cp.command.verb == "add" for cp in cplans)
         if is_add_phase:
             ctl.reserve(qid, self.planner.estimate_fanout(cplans),
-                        first_phase=first_phase)
+                        first_phase=first_phase, tenant=tenant,
+                        n_ops=n_ops)
             return
         if not ctl.saturated():
             return
         if self.result_cache is not None and use_cache:
             return
         ctl.precheck(self.planner.estimate_fanout(cplans),
-                     first_phase=first_phase)
+                     first_phase=first_phase, tenant=tenant, n_ops=n_ops)
 
     def _launch(self, ents: list[Entity], *, priority: int = 0,
-                first_phase: bool = True):
+                first_phase: bool = True, tenant: str = ""):
         """Launch one phase's entities, gated by admission control when
         enabled: the controller returns the subset that fits under
         ``max_inflight_entities`` now, parks the rest in its pending
@@ -571,8 +616,10 @@ class VDMSAsyncEngine:
         ctl = self.admission_ctl
         if ctl is not None:
             qid = ents[0].query_id if ents else ""
+            n_ops = max((len(e.ops) for e in ents), default=1)
             ents = ctl.admit_phase(qid, ents, priority,
-                                   first_phase=first_phase)
+                                   first_phase=first_phase,
+                                   tenant=tenant, n_ops=n_ops)
             if qid and self._is_cancelled(qid):
                 # cancel raced the admission: if its drop_query ran
                 # BEFORE admit_phase re-entered this query in the
@@ -619,8 +666,7 @@ class VDMSAsyncEngine:
                 # error path delivers the SAME entity here a second
                 # time, which must not double-release capacity.
                 ent.admission_released = True
-                self._launch_now(
-                    self.admission_ctl.note_done(ent.query_id))
+                self._launch_now(self.admission_ctl.note_done(ent))
 
     def _is_cancelled(self, qid: str) -> bool:
         # hot path (checked at every op boundary by every worker): a bare

@@ -41,6 +41,12 @@ class Entity:
     # in-flight slot, so the error path's second on_entity_done call
     # for the same entity can never double-release capacity
     admission_released: bool = False
+    # admission v2 (stamped by admit_phase only when tenant quotas /
+    # cost-aware admission are configured; defaults keep the v1 ledger
+    # exact): the owning query's tenant lane and the unit charge this
+    # entity holds against the admission budget
+    tenant: str = ""
+    admission_cost: float = 1.0
     # fault tolerance (set only when the relevant knobs are on):
     # deadline is the query's monotonic retry budget — remote retries
     # never outlive it; fallback_ops holds op indices the event loop

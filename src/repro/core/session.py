@@ -41,7 +41,7 @@ class QuerySession:
     def __init__(self, qid: str, plan: "QueryPlan", engine: Any,
                  on_entity: Optional[Callable[[Entity], None]] = None,
                  use_cache: bool = True, priority: int = 0,
-                 deadline: Optional[float] = None):
+                 deadline: Optional[float] = None, tenant: str = ""):
         self.qid = qid
         self.plan = plan
         self._engine = engine
@@ -49,6 +49,7 @@ class QuerySession:
         self.use_cache = use_cache
         self.priority = priority   # admission pending-lane ordering
         self.deadline = deadline   # monotonic; bounds remote retries
+        self.tenant = tenant       # admission-v2 quota lane ("" = exempt)
         self._cv = threading.Condition()
         self._state = _RUNNING
         self._phase = -1
@@ -87,7 +88,7 @@ class QuerySession:
                 self._engine._admission_precheck(
                     self.plan.phases[phase_idx], qid=self.qid,
                     first_phase=phase_idx == 0,
-                    use_cache=self.use_cache)
+                    use_cache=self.use_cache, tenant=self.tenant)
                 instant: list[Entity] = []   # zero-op entities: already done
                 to_run: list[Entity] = []
                 # Expansion runs UNDER the session lock: an Add phase
@@ -122,7 +123,8 @@ class QuerySession:
                     self._stream(e)
                 if to_run:
                     self._engine._launch(to_run, priority=self.priority,
-                                         first_phase=phase_idx == 0)
+                                         first_phase=phase_idx == 0,
+                                         tenant=self.tenant)
                     return
                 phase_idx += 1
         except Exception as e:  # noqa: BLE001 — surface via the future

@@ -66,14 +66,18 @@ class OverloadError(RuntimeError):
       is likely to be available (deficit entities / recent completion
       rate, clamped to [1e-3, 60]); ``load`` — the load-score component
       snapshot at rejection time (see
-      :meth:`AdmissionController.load_score`).
+      :meth:`AdmissionController.load_score`); ``tenant`` — set when the
+      rejection came from a per-tenant quota rather than the global cap
+      (the serving front-end surfaces it in the 429 frame so a client
+      can tell "the engine is full" from "YOUR share is full").
     """
 
     def __init__(self, msg: str, *, retry_after_s: float = 1.0,
-                 load: dict | None = None):
+                 load: dict | None = None, tenant: str | None = None):
         super().__init__(msg)
         self.retry_after_s = retry_after_s
         self.load = load or {}
+        self.tenant = tenant
 
 
 class AdmissionController:
@@ -90,7 +94,12 @@ class AdmissionController:
     """
 
     def __init__(self, *, max_inflight: int, policy: str,
-                 queue_cap: int = 1024, clock=time.monotonic):
+                 queue_cap: int = 1024,
+                 tenant_weights: dict | None = None,
+                 tenant_default_weight: float = 1.0,
+                 cost_aware: bool = False,
+                 cost_cap_s: float = 0.0,
+                 clock=time.monotonic):
         if policy not in ("queue", "shed"):
             raise ValueError(
                 f"admission policy must be 'queue' or 'shed' once "
@@ -102,9 +111,57 @@ class AdmissionController:
         if queue_cap < 0:
             raise ValueError(
                 f"admission_queue_cap must be >= 0, got {queue_cap}")
+        if tenant_weights is not None:
+            if not tenant_weights:
+                raise ValueError(
+                    "tenant_weights must name at least one tenant when "
+                    "given (an empty quota table would be silently inert)")
+            for t, w in tenant_weights.items():
+                if not isinstance(t, str) or not t:
+                    raise ValueError(
+                        f"tenant names must be non-empty strings, got {t!r}")
+                if not isinstance(w, (int, float)) or w <= 0:
+                    raise ValueError(
+                        f"tenant weight for {t!r} must be > 0, got {w!r}")
+        if tenant_default_weight <= 0:
+            raise ValueError(
+                f"tenant_default_weight must be > 0, got "
+                f"{tenant_default_weight!r}")
+        if cost_aware and cost_cap_s <= 0:
+            raise ValueError(
+                f"cost-aware admission needs cost_cap_s > 0 (the "
+                f"work-seconds budget it charges against), got "
+                f"{cost_cap_s!r}")
+        if cost_cap_s > 0 and not cost_aware:
+            raise ValueError(
+                "cost_cap_s requires cost_aware (a work-seconds budget "
+                "nothing charges against would be silently inert)")
         self.max_inflight = max_inflight
         self.policy = policy
         self.queue_cap = queue_cap
+        # ---- admission v2 (both default-off; see class docstring) ----
+        # per-tenant weighted quotas: tenant t's share of the admission
+        # budget is weight(t) / (sum of configured weights [+ t's weight
+        # when it is an unlisted tenant]); the empty tenant "" (plain
+        # in-process submits) is exempt, so default-path behavior is
+        # untouched.  cost-aware admission charges each entity its
+        # estimated work-seconds (ops x OpCostTracker.mean_estimate)
+        # against cost_cap_s instead of counting raw entities; the
+        # entity-count ledger stays authoritative for leak invariants.
+        self.tenant_weights = (dict(tenant_weights)
+                               if tenant_weights is not None else None)
+        self.tenant_default_weight = tenant_default_weight
+        self.cost_aware = cost_aware
+        self.cost_cap_s = cost_cap_s
+        self._tenant_used: dict[str, float] = {}      # in-flight units
+        self._tenant_reserved: dict[str, float] = {}
+        self._tenant_by_query: dict[str, str] = {}
+        self._units_by_query: dict[str, float] = {}   # in-flight units
+        self._inflight_cost = 0.0
+        self._pending_cost = 0.0
+        self._pending_cost_by_query: dict[str, float] = {}
+        self._reserved_cost_total = 0.0
+        self._reserved_cost_by_query: dict[str, float] = {}
         self._clock = clock
         self._lock = threading.Lock()
         self._inflight = 0
@@ -214,12 +271,83 @@ class AdmissionController:
             return max(1e-4, self._pool.latency_estimate())
         return 1e-3
 
-    def _overload_locked(self, msg: str, deficit: int) -> OverloadError:
+    def _overload_locked(self, msg: str, deficit: int,
+                         tenant: str | None = None) -> OverloadError:
         retry = min(60.0, max(1e-3, deficit * self._service_estimate()))
         return OverloadError(f"{msg} (retry_after_s={retry:.3g})",
                              retry_after_s=retry,
                              load=self._compose_load(self._inflight,
-                                                     self._pending_total))
+                                                     self._pending_total),
+                             tenant=tenant)
+
+    def _overload_seconds_locked(self, msg: str, deficit_s: float,
+                                 tenant: str | None = None) -> OverloadError:
+        """Overload whose deficit is already in work-seconds (cost-aware
+        admission / tenant quotas under it): the retry estimate IS the
+        deficit, no per-entity conversion needed."""
+        retry = min(60.0, max(1e-3, deficit_s))
+        return OverloadError(f"{msg} (retry_after_s={retry:.3g})",
+                             retry_after_s=retry,
+                             load=self._compose_load(self._inflight,
+                                                     self._pending_total),
+                             tenant=tenant)
+
+    # ------------------------------------------------- admission v2 units
+    def unit_charge(self, n_ops: int = 1) -> float:
+        """The admission charge for one entity, in this controller's
+        units: ``1.0`` (one entity) normally, or the entity's estimated
+        work-seconds — ops x the cost tracker's calibrated mean per-op
+        estimate (1 ms until anything is observed) — under cost-aware
+        admission."""
+        if not self.cost_aware:
+            return 1.0
+        est = None
+        if self._tracker is not None:
+            est = self._tracker.mean_estimate()
+        if est is None:
+            est = 1e-3
+        return max(1, n_ops) * est
+
+    def _tenant_cap_locked(self, tenant: str) -> float:
+        """Tenant ``tenant``'s weighted fair share of the admission
+        budget, in units.  Unlisted tenants weigh
+        ``tenant_default_weight`` (their weight joins the denominator,
+        so a configured tenant's share is computed against a stable
+        total plus at most one stranger)."""
+        w = self.tenant_weights.get(tenant)
+        total = sum(self.tenant_weights.values())
+        if w is None:
+            w = self.tenant_default_weight
+            total += w
+        budget = self.cost_cap_s if self.cost_aware else float(
+            self.max_inflight)
+        return budget * w / total
+
+    def _check_tenant_locked(self, qid: str, tenant: str, units: float,
+                             *, shed_now: bool) -> bool:
+        """Per-tenant quota gate.  Returns True when the work fits under
+        the tenant's share right now; raises (``shed_now``) or returns
+        False (park in the pending lane, drained as the tenant frees its
+        own share).  A tenant holding nothing is always allowed its
+        first phase, so one entity's charge exceeding a small share can
+        never starve the tenant outright."""
+        if self.tenant_weights is None or not tenant:
+            return True
+        used = (self._tenant_used.get(tenant, 0.0)
+                + self._tenant_reserved.get(tenant, 0.0))
+        cap = self._tenant_cap_locked(tenant)
+        if used <= 0.0 or used + units <= cap + 1e-12:
+            return True
+        if shed_now:
+            self.shed += 1
+            raise self._overload_seconds_locked(
+                f"tenant quota exceeded: tenant {tenant!r} of query "
+                f"{qid or '<estimate>'} holds {used:.4g} of its "
+                f"{cap:.4g}-unit share and asked for {units:.4g} more",
+                (used + units - cap) * (self._service_estimate()
+                                        if not self.cost_aware else 1.0),
+                tenant=tenant)
+        return False
 
     def _never_fits_locked(self, qid: str, n: int) -> OverloadError:
         """A first phase larger than the whole cap can NEVER be admitted
@@ -251,12 +379,19 @@ class AdmissionController:
             avail -= self._reserved_total
         return avail
 
-    def _check_locked(self, qid: str, n: int, *, first_phase: bool) -> None:
+    def _check_locked(self, qid: str, n: int, *, first_phase: bool,
+                      tenant: str = "", units: float | None = None) -> None:
         """THE shed/queue decision, in exactly one place —
         :meth:`precheck` (advisory, on an estimate), :meth:`reserve`
         (claiming, pre-ingest) and :meth:`admit_phase` (authoritative,
         post-expand) all call it.  Raises :class:`OverloadError` iff
-        ``n`` more entities cannot be accepted now."""
+        ``n`` more entities cannot be accepted now.  ``units`` is the
+        phase's admission charge (== ``n`` unless cost-aware); the
+        entity-count decision below is byte-identical to v1 — the
+        cost budget and tenant quota are additional gates layered on
+        top, both inert unless configured."""
+        if units is None:
+            units = float(n)
         avail = self._avail_locked()
         if self.policy == "shed" and first_phase:
             if n > self.max_inflight:
@@ -271,6 +406,28 @@ class AdmissionController:
                     f"{n} entities, {effective} in-flight slots free "
                     f"(max_inflight_entities={self.max_inflight})",
                     n - effective)
+            if self.cost_aware:
+                if units > self.cost_cap_s:
+                    self.shed += 1
+                    raise OverloadError(
+                        f"admission shed: query {qid or '<estimate>'} "
+                        f"charges {units:.4g} estimated work-seconds but "
+                        f"cost_cap_s={self.cost_cap_s}; it can never be "
+                        f"admitted under admission='shed'",
+                        retry_after_s=float("inf"),
+                        load=self._compose_load(self._inflight,
+                                                self._pending_total))
+                free_s = max(0.0, self.cost_cap_s - self._inflight_cost
+                             - self._reserved_cost_total
+                             - self._pending_cost)
+                if units > free_s:
+                    self.shed += 1
+                    raise self._overload_seconds_locked(
+                        f"admission shed: query {qid or '<estimate>'} "
+                        f"charges {units:.4g} work-seconds, {free_s:.4g} "
+                        f"free (cost_cap_s={self.cost_cap_s})",
+                        units - free_s)
+            self._check_tenant_locked(qid, tenant, units, shed_now=True)
         else:
             # under "queue" a reservation holds pending-lane budget
             reserved = self._reserved_total if self.policy == "queue" else 0
@@ -283,7 +440,14 @@ class AdmissionController:
                     f"admission_queue_cap={self.queue_cap}",
                     will_wait - self.queue_cap)
 
-    def precheck(self, n_estimate: int, *, first_phase: bool) -> None:
+    def _v2(self) -> bool:
+        """True when any admission-v2 feature (tenant quotas or
+        cost-aware charging) is configured; the unit ledgers below are
+        maintained only then, so the v1 path does zero extra work."""
+        return self.cost_aware or self.tenant_weights is not None
+
+    def precheck(self, n_estimate: int, *, first_phase: bool,
+                 tenant: str = "", n_ops: int = 1) -> None:
         """Advisory check on an *estimated* fan-out, run before a Find
         expansion when :meth:`saturated`.  Raises
         :class:`OverloadError` when the phase certainly cannot be
@@ -294,9 +458,12 @@ class AdmissionController:
         with self._lock:
             if self._closed:
                 raise self._overload_locked("engine is shutting down", 0)
-            self._check_locked("", n_estimate, first_phase=first_phase)
+            units = n_estimate * self.unit_charge(n_ops)
+            self._check_locked("", n_estimate, first_phase=first_phase,
+                               tenant=tenant, units=units)
 
-    def reserve(self, qid: str, n: int, *, first_phase: bool) -> None:
+    def reserve(self, qid: str, n: int, *, first_phase: bool,
+                tenant: str = "", n_ops: int = 1) -> None:
         """Atomically decide AND claim admission for ``n`` entities
         *before* their side-effectful expansion runs (an Add barrier
         ingests during expand).  After a successful reserve,
@@ -311,18 +478,40 @@ class AdmissionController:
         with self._lock:
             if self._closed:
                 raise self._overload_locked("engine is shutting down", 0)
-            self._check_locked(qid, n, first_phase=first_phase)
+            units = n * self.unit_charge(n_ops)
+            self._check_locked(qid, n, first_phase=first_phase,
+                               tenant=tenant, units=units)
             self._reserved_total += n
             self._reserved_by_query[qid] = \
                 self._reserved_by_query.get(qid, 0) + n
+            if self._v2():
+                self._reserved_cost_total += units
+                self._reserved_cost_by_query[qid] = \
+                    self._reserved_cost_by_query.get(qid, 0.0) + units
+                if tenant:
+                    self._tenant_by_query[qid] = tenant
+                    self._tenant_reserved[tenant] = \
+                        self._tenant_reserved.get(tenant, 0.0) + units
 
     def _release_reservation_locked(self, qid: str) -> int:
         r = self._reserved_by_query.pop(qid, 0)
         self._reserved_total -= r
+        if self._v2():
+            u = self._reserved_cost_by_query.pop(qid, 0.0)
+            self._reserved_cost_total = max(
+                0.0, self._reserved_cost_total - u)
+            t = self._tenant_by_query.get(qid, "")
+            if t and u > 0.0:
+                left = self._tenant_reserved.get(t, 0.0) - u
+                if left <= 1e-12:
+                    self._tenant_reserved.pop(t, None)
+                else:
+                    self._tenant_reserved[t] = left
         return r
 
     def admit_phase(self, qid: str, ents: list, priority: int,
-                    *, first_phase: bool) -> list:
+                    *, first_phase: bool, tenant: str = "",
+                    n_ops: int = 1) -> list:
         """Admit one phase launch of ``len(ents)`` entities.  Returns
         the entities to launch *now*; the rest wait in the pending lane
         (``admission="queue"``, or any continuation phase — a query
@@ -338,6 +527,18 @@ class AdmissionController:
             if self._closed:
                 self._release_reservation_locked(qid)
                 raise self._overload_locked("engine is shutting down", 0)
+            per = self.unit_charge(n_ops)
+            if self._v2():
+                # stamp each entity with its tenant and unit charge, so
+                # the drain / note_done / drop paths release exactly
+                # what was charged even if the cost estimate has
+                # drifted by then (setattr: admission's own _E test
+                # stubs and plain Entities both take it)
+                for e in ents:
+                    setattr(e, "tenant", tenant)
+                    setattr(e, "admission_cost", per)
+                if tenant:
+                    self._tenant_by_query[qid] = tenant
             reserved = self._release_reservation_locked(qid)
             if self.policy == "shed" and reserved >= n:
                 # pre-claimed slots go straight to in-flight, bypassing
@@ -349,13 +550,16 @@ class AdmissionController:
                 self._inflight_by_query[qid] = \
                     self._inflight_by_query.get(qid, 0) + n
                 self.admitted += n
+                if self._v2():
+                    self._charge_inflight_locked(qid, tenant, n * per)
                 return [*ents, *self._drain_locked()]
             if reserved < n:
                 # the unreserved remainder must pass the normal check
                 # (raises atomically: the reservation was already
                 # refunded above, nothing is half-claimed)
                 self._check_locked(qid, n - reserved,
-                                   first_phase=first_phase)
+                                   first_phase=first_phase, tenant=tenant,
+                                   units=(n - reserved) * per)
             # every entity enters the lane, then the drain pops in
             # global priority order — new work can never jump ahead of
             # equal-or-higher-priority work already waiting
@@ -365,20 +569,53 @@ class AdmissionController:
             self._pending_by_query[qid] = \
                 self._pending_by_query.get(qid, 0) + n
             self.queued += n
+            if self._v2():
+                self._pending_cost += n * per
+                self._pending_cost_by_query[qid] = \
+                    self._pending_cost_by_query.get(qid, 0.0) + n * per
             return self._drain_locked()
+
+    def _charge_inflight_locked(self, qid: str, tenant: str,
+                                units: float) -> None:
+        """Move ``units`` of admission charge onto the in-flight unit
+        ledgers (cost budget + tenant usage)."""
+        self._inflight_cost += units
+        self._units_by_query[qid] = \
+            self._units_by_query.get(qid, 0.0) + units
+        if tenant:
+            self._tenant_used[tenant] = \
+                self._tenant_used.get(tenant, 0.0) + units
 
     def _drain_locked(self) -> list:
         """Pop pending entities into the in-flight ledger while slots
         are free.  Tombstoned entries (queries dropped while pending)
         are skipped without touching the totals — drop_query already
-        discounted them."""
+        discounted them.  Under admission v2 an entry whose tenant is
+        over its share, or whose charge does not fit the cost budget,
+        is *skipped and re-pushed* — a later entry from another tenant
+        (or a cheaper one) may still fit, and the blocked entry keeps
+        its priority/FIFO position for the next drain."""
         out = []
+        skipped: list[tuple[int, int, Any]] = []
+        v2 = self._v2()
         while self._heap and self._inflight < self.max_inflight:
-            _, _, ent = heapq.heappop(self._heap)
+            item = heapq.heappop(self._heap)
+            ent = item[2]
             qid = ent.query_id
             live = self._pending_by_query.get(qid, 0)
             if live <= 0:
                 continue            # tombstone from drop_query
+            if v2:
+                c = getattr(ent, "admission_cost", 1.0)
+                t = getattr(ent, "tenant", "")
+                if (self.cost_aware and self._inflight_cost > 0.0
+                        and self._inflight_cost + self._reserved_cost_total
+                        + c > self.cost_cap_s + 1e-12):
+                    skipped.append(item)
+                    continue
+                if not self._check_tenant_locked(qid, t, c, shed_now=False):
+                    skipped.append(item)
+                    continue
             if live == 1:
                 del self._pending_by_query[qid]
             else:
@@ -388,18 +625,31 @@ class AdmissionController:
             self._inflight_by_query[qid] = \
                 self._inflight_by_query.get(qid, 0) + 1
             self.admitted += 1
+            if v2:
+                self._pending_cost = max(0.0, self._pending_cost - c)
+                left = self._pending_cost_by_query.get(qid, 0.0) - c
+                if left <= 1e-12:
+                    self._pending_cost_by_query.pop(qid, None)
+                else:
+                    self._pending_cost_by_query[qid] = left
+                self._charge_inflight_locked(qid, t, c)
             out.append(ent)
+        for item in skipped:
+            heapq.heappush(self._heap, item)
         self.peak_inflight = max(self.peak_inflight, self._inflight)
         return out
 
     # --------------------------------------------------------- completion
-    def note_done(self, qid: str) -> list:
-        """One of ``qid``'s in-flight entities completed (or failed) its
-        pipeline.  Releases its slot and returns any pending entities
-        the freed capacity now admits — the caller (an event-loop
-        thread) launches them.  A no-op for queries the controller no
-        longer tracks (completion racing a cancel: ``drop_query``
-        already released the slot)."""
+    def note_done(self, ent) -> list:
+        """One of a query's in-flight entities completed (or failed) its
+        pipeline; ``ent`` is the Entity itself (so admission v2 can
+        release its stamped unit charge) or, for callers that only have
+        it, the query id string.  Releases its slot and returns any
+        pending entities the freed capacity now admits — the caller (an
+        event-loop thread) launches them.  A no-op for queries the
+        controller no longer tracks (completion racing a cancel:
+        ``drop_query`` already released the slot)."""
+        qid = ent if isinstance(ent, str) else ent.query_id
         with self._lock:
             live = self._inflight_by_query.get(qid, 0)
             if live <= 0:
@@ -410,6 +660,10 @@ class AdmissionController:
                 self._inflight_by_query[qid] = live - 1
             self._inflight -= 1
             self.completed += 1
+            if self._v2():
+                c = (1.0 if isinstance(ent, str)
+                     else getattr(ent, "admission_cost", 1.0))
+                self._release_units_locked(qid, c, final=(live == 1))
             now = self._clock()
             if self._last_done is not None:
                 dt = max(1e-6, now - self._last_done)
@@ -418,6 +672,34 @@ class AdmissionController:
             if self._closed:
                 return []
             return self._drain_locked()
+
+    def _release_units_locked(self, qid: str, units: float,
+                              *, final: bool) -> None:
+        """Release ``units`` of in-flight admission charge for ``qid``
+        (clamped to what the query actually holds, so a racing release
+        can never drive a ledger negative).  ``final`` drops the
+        query's per-query unit entries entirely."""
+        held = self._units_by_query.get(qid, 0.0)
+        u = min(units, held)
+        t = self._tenant_by_query.get(qid, "")
+        if final:
+            self._units_by_query.pop(qid, None)
+            u = held
+        elif held - u <= 1e-12:
+            self._units_by_query.pop(qid, None)
+            u = held
+        else:
+            self._units_by_query[qid] = held - u
+        self._inflight_cost = max(0.0, self._inflight_cost - u)
+        if t:
+            left = self._tenant_used.get(t, 0.0) - u
+            if left <= 1e-12:
+                self._tenant_used.pop(t, None)
+            else:
+                self._tenant_used[t] = left
+        if final and qid not in self._reserved_cost_by_query \
+                and qid not in self._pending_cost_by_query:
+            self._tenant_by_query.pop(qid, None)
 
     def drop_query(self, qid: str) -> list:
         """Cancellation/timeout cleanup: atomically forget the query's
@@ -432,6 +714,12 @@ class AdmissionController:
             self._pending_total -= pending
             reserved = self._release_reservation_locked(qid)
             self.dropped += released + pending + reserved
+            if self._v2():
+                pc = self._pending_cost_by_query.pop(qid, 0.0)
+                self._pending_cost = max(0.0, self._pending_cost - pc)
+                self._release_units_locked(
+                    qid, self._units_by_query.get(qid, 0.0), final=True)
+                self._tenant_by_query.pop(qid, None)
             if self._closed or (released == 0 and pending == 0
                                 and reserved == 0):
                 return []
@@ -449,6 +737,11 @@ class AdmissionController:
             self._pending_by_query.clear()
             self._reserved_total = 0
             self._reserved_by_query.clear()
+            self._pending_cost = 0.0
+            self._pending_cost_by_query.clear()
+            self._reserved_cost_total = 0.0
+            self._reserved_cost_by_query.clear()
+            self._tenant_reserved.clear()
 
     # -------------------------------------------------------------- stats
     def inflight(self) -> int:
@@ -476,5 +769,23 @@ class AdmissionController:
                 "dropped": self.dropped,
                 "completion_rate_est": self._rate,
             }
+            if self.tenant_weights is not None:
+                names = (set(self.tenant_weights) | set(self._tenant_used)
+                         | set(self._tenant_reserved))
+                out["tenants"] = {
+                    t: {"weight": self.tenant_weights.get(
+                            t, self.tenant_default_weight),
+                        "share_units": self._tenant_cap_locked(t),
+                        "used_units": self._tenant_used.get(t, 0.0),
+                        "reserved_units": self._tenant_reserved.get(t, 0.0)}
+                    for t in sorted(names)}
+            if self.cost_aware:
+                out["cost"] = {
+                    "cost_cap_s": self.cost_cap_s,
+                    "inflight_cost_s": self._inflight_cost,
+                    "pending_cost_s": self._pending_cost,
+                    "reserved_cost_s": self._reserved_cost_total,
+                    "unit_charge_s": self.unit_charge(1),
+                }
         out["load"] = self.load_score()
         return out

@@ -349,3 +349,142 @@ def test_ring_lookup_is_stable_and_insertion_order_free(vnodes, key_base):
     for i in range(64):
         k = f"image-{key_base + i}"
         assert a.owners(k, 2) == b.owners(k, 2)
+
+
+# ---------------------------------------------- wire protocol framing
+wire_event_st = st.sampled_from(
+    ["submitted", "entity", "complete", "overload", "error", "cancelled",
+     "pong", "submit", "cancel", "ping"])
+wire_scalar_st = st.one_of(
+    st.none(), st.booleans(), st.integers(-2**31, 2**31),
+    st.floats(allow_nan=False, allow_infinity=False, width=32),
+    st.text(max_size=12))
+wire_array_st = st.tuples(
+    st.sampled_from(["uint8", "int32", "float32", "float64"]),
+    st.lists(st.integers(1, 4), min_size=0, max_size=3),
+    st.integers(0, 2**32 - 1),
+).map(lambda t: np.random.default_rng(t[2])
+      .uniform(0, 255, t[1]).astype(t[0]))
+wire_payload_st = st.dictionaries(
+    st.text(alphabet="abcdefgh0123456789_", min_size=1, max_size=8),
+    st.one_of(wire_scalar_st, wire_array_st,
+              st.lists(wire_scalar_st, max_size=4)),
+    max_size=5)
+wire_frames_st = st.lists(st.tuples(wire_event_st, wire_payload_st),
+                          min_size=0, max_size=8)
+
+
+def _chunked(blob: bytes, cuts: list) -> list:
+    """Split ``blob`` at the (deduped, sorted) cut offsets."""
+    points = sorted({c % (len(blob) + 1) for c in cuts})
+    out, prev = [], 0
+    for p in points:
+        out.append(blob[prev:p])
+        prev = p
+    out.append(blob[prev:])
+    return out
+
+
+@SET
+@given(wire_frames_st, st.lists(st.integers(0, 10**9), max_size=20))
+def test_wire_codec_roundtrips_under_any_chunking(frames, cuts):
+    """encode -> concatenate -> split at arbitrary byte offsets ->
+    incremental decode reproduces the exact frame sequence: the decoder
+    is chunking-invariant (TCP gives no message boundaries)."""
+    from repro.serving.wire import FrameDecoder, encode_frame, from_jsonable, to_jsonable
+
+    blob = b"".join(encode_frame(e, to_jsonable(p)) for e, p in frames)
+    decoder = FrameDecoder()
+    got = []
+    for chunk in _chunked(blob, cuts):
+        got.extend(decoder.feed(chunk))
+    assert len(got) == len(frames)
+    for (we, wp), (ge, gp) in zip(frames, got):
+        assert ge == we
+        decoded = from_jsonable(gp)
+        assert set(decoded) == set(wp)
+        for k, v in wp.items():
+            if isinstance(v, np.ndarray):
+                assert decoded[k].dtype == v.dtype
+                assert decoded[k].shape == v.shape
+                assert np.array_equal(decoded[k], v)
+            elif isinstance(v, float):
+                assert decoded[k] == pytest.approx(v, nan_ok=True)
+            else:
+                assert decoded[k] == v
+
+
+# one live engine run, captured once at module scope: hypothesis then
+# varies only the frame ORDER and CHUNKING, so the oracle (the
+# in-process result) is fixed and the property stays fast
+_WIRE_REF: dict = {}
+
+
+def _wire_reference():
+    if _WIRE_REF:
+        return _WIRE_REF["frames"], _WIRE_REF["result"]
+    from repro.serving.wire import to_jsonable
+
+    eng = VDMSAsyncEngine(
+        num_remote_servers=1, num_native_workers=1, fair_scheduling=False,
+        transport=TransportModel(network_latency_s=0.0005,
+                                 service_time_s=0.0005))
+    try:
+        rng = np.random.default_rng(31)
+        for _ in range(5):
+            eng.add_entity("image",
+                           rng.uniform(0, 255, (8, 8, 3)).astype(np.float32),
+                           {"category": "wp"})
+        frames = []
+
+        def on_entity(ent):
+            frames.append(("entity",
+                           {"rid": "r", "eid": ent.eid,
+                            "cmd_index": ent.cmd_index,
+                            "failed": ent.failed,
+                            "data": to_jsonable(ent.data)}))
+
+        # two Find commands over the same set: each eid streams one
+        # frame per command, so reassembly must apply the
+        # max-cmd_index-wins rule, not just collect by eid
+        res = eng.submit(
+            [{"FindImage": {"constraints": {"category": ["==", "wp"]},
+                            "operations": [{"type": "grayscale"}]}},
+             {"FindImage": {"constraints": {"category": ["==", "wp"]},
+                            "operations": [{"type": "rotate", "k": 2}]}}],
+            on_entity=on_entity).result(60)
+        frames.append(("complete",
+                       {"rid": "r", "eids": list(res["entities"]),
+                        "stats": to_jsonable(res["stats"])}))
+    finally:
+        eng.shutdown()
+    _WIRE_REF["frames"] = frames
+    _WIRE_REF["result"] = res
+    return frames, res
+
+
+@SET
+@given(st.integers(0, 2**32 - 1),
+       st.lists(st.integers(0, 10**9), max_size=30))
+def test_wire_reassembly_invariant_under_interleaving(shuffle_seed, cuts):
+    """Any permutation + chunking of one query's streamed frames
+    reassembles to the exact in-process response: entity values
+    bit-for-bit, dict key order identical."""
+    from repro.serving.wire import FrameDecoder, encode_frame, reassemble
+
+    frames, want = _wire_reference()
+    shuffled = list(frames)
+    np.random.default_rng(shuffle_seed).shuffle(shuffled)
+    blob = b"".join(encode_frame(e, p) for e, p in shuffled)
+    decoder = FrameDecoder()
+    got_frames = []
+    for chunk in _chunked(blob, cuts):
+        got_frames.extend(decoder.feed(chunk))
+    got = reassemble(got_frames)
+    assert list(got["entities"]) == list(want["entities"])
+    for eid, arr in want["entities"].items():
+        w = got["entities"][eid]
+        assert w.dtype == arr.dtype and w.shape == arr.shape
+        assert np.array_equal(w, arr)
+    assert got["stats"]["matched"] == want["stats"]["matched"]
+    assert got["stats"]["failed"] == want["stats"]["failed"]
