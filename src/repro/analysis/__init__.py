@@ -1,0 +1,61 @@
+"""Static concurrency & convention analyzer for the repro engine.
+
+The engine is a heavily threaded system — 28+ locks and conditions
+across ``core/``, ``query/``, ``cluster/``, ``serving/`` and
+``distributed/`` — and its conventions (one-lock critical sections,
+``# guarded-by:`` fields, ``*_locked`` callee naming, default-off
+knobs, the ``Backend``/``OffloadInboxMixin`` contracts) were enforced
+by review only.  This package turns them into machine-checked CI
+gates, purely from the AST (stdlib ``ast``, no third-party deps, no
+imports of the analyzed code).
+
+Check families
+--------------
+
+``lock-order`` / ``lock-reentrant``
+    Every ``with <lock>:`` / ``.acquire()`` nesting is extracted per
+    function and stitched into an interprocedural lock-acquisition
+    graph over the module call graph; cycles are reported as potential
+    deadlocks, and reentrant acquisition of the same attribute-path
+    lock through a non-RLock type is reported as a self-deadlock.
+
+``guarded-by``
+    ``self.x = ...  # guarded-by: _lock`` annotates an instance
+    attribute as owned by a lock attribute of the same object.  Reads
+    and writes of annotated fields outside a ``with self._lock:``
+    block (or a ``*_locked`` method, whose callers are themselves
+    checked) are flagged.
+
+``blocking-under-lock``
+    Blocking calls — ``time.sleep``, thread ``join``, untimed
+    ``Queue.get``/bounded ``put``, ``future.result()``, socket
+    ``recv/sendall/accept/connect``, untimed ``Event.wait``, user
+    callbacks — made while any lock is held are flagged, including
+    transitively through same-instance method calls.
+
+``knob-inert``
+    Constructor knobs of the public engines (``VDMSAsyncEngine``,
+    ``ShardedEngine``, ``WireFrontend``) must be keyword arguments
+    with inert (default-off) defaults and must be referenced by at
+    least one test or benchmark.
+
+``backend-protocol``
+    Every class registered as a dispatch backend must statically
+    implement the ``Backend`` protocol surface, and offload backends
+    must honor the ``OffloadInboxMixin`` shutdown contract (gated
+    submit, ``OFFLOAD_STOP`` pill, post-join drain).
+
+Deliberate exceptions carry an inline waiver::
+
+    self._inflight >= self.max_inflight  # analysis: ok(guarded-by) — racy read is deliberate
+
+A waiver that suppresses nothing is itself an error
+(``useless-waiver``), so waivers cannot rot.  Accepted pre-existing
+findings live in ``analysis_baseline.json``; the CI gate
+(``python -m repro.analysis src/ --check-baseline``) fails only on
+findings whose fingerprint is not in the baseline.
+"""
+from repro.analysis.model import Finding, Waiver
+from repro.analysis.runner import AnalysisResult, run_analysis
+
+__all__ = ["AnalysisResult", "Finding", "Waiver", "run_analysis"]

@@ -1,0 +1,270 @@
+"""Guarded-by discipline + blocking-calls-under-lock.
+
+``guarded-by`` semantics: an attribute annotated ``# guarded-by: L``
+in class ``C`` may be touched only
+
+* inside a ``with self.L:`` block (on the same instance),
+* inside a ``*_locked``-suffixed method (the repo convention for
+  "caller holds the lock" — call sites of those methods are checked
+  instead: they must hold *some* lock of the class), or
+* inside ``__init__`` (the object is not yet shared).
+
+Only ``self.<attr>`` accesses are checked — cross-object accesses
+(``other._x``) are out of scope for a lexical checker and rare by
+convention.  Subclass methods are checked against annotations merged
+down the harvested MRO.
+
+``blocking-under-lock`` flags calls that can block indefinitely while
+any lock is held: ``time.sleep``, thread ``join``, zero-arg
+``Queue.get`` / bounded-``Queue.put`` without timeout, zero-arg
+``future.result()``, socket ``recv/sendall/accept/connect``, untimed
+``.wait()`` (except a condition variable waiting on the *only* held
+lock, which releases it), and user callbacks (``self.on_*`` /
+``self._on_*`` or bare ``cb()``/``callback()``).  The check follows
+same-instance calls transitively, so a helper that sleeps is flagged
+at the call site that holds the lock.
+"""
+from __future__ import annotations
+
+import re
+
+from repro.analysis.harvest import CallSite, ClassFacts, ModuleFacts
+from repro.analysis.locks import LockAnalysis
+from repro.analysis.model import Finding
+
+CALLBACK_SELF = re.compile(r"^_?on_[a-z0-9_]+$")
+CALLBACK_NAME = frozenset({"cb", "callback", "hook"})
+SOCKET_BLOCKING = frozenset({"sendall", "recv", "recv_into", "accept",
+                             "connect"})
+THREADISH = re.compile(r"thread|worker|writer|reader", re.IGNORECASE)
+
+
+def _merged_guards(la: LockAnalysis, cls_name: str) -> dict:
+    guards: dict = {}
+    for cf in reversed(la.mro(cls_name)):
+        for attr, (lock, line) in cf.guards.items():
+            guards[attr] = lock
+    return guards
+
+
+def _class_lock_attrs(la: LockAnalysis, cls_name: str) -> set:
+    attrs: set = set()
+    for cf in la.mro(cls_name):
+        attrs.update(cf.lock_attrs)
+    return attrs
+
+
+def _holds(held: tuple, lock_attr: str) -> bool:
+    return ("self", lock_attr) in held
+
+
+def _queue_bounded(la: LockAnalysis, cls_name: str | None,
+                   attr: str) -> bool | None:
+    if cls_name is None:
+        return None
+    for cf in la.mro(cls_name):
+        if attr in cf.queue_attrs:
+            return cf.queue_attrs[attr]
+    return None
+
+
+def _blocking_reason(site: CallSite, la: LockAnalysis,
+                     cls_name: str | None) -> str | None:
+    """Why this call site is intrinsically blocking, else None.
+
+    Judged independently of held locks; the caller decides whether a
+    lock is held.  The one lock-sensitive case (condition-variable
+    wait on the sole held lock) is handled by the caller.
+    """
+    name, kind, recv = site.name, site.kind, site.recv
+    timed = "timeout" in site.kwnames
+    if name == "sleep" and (kind == "name"
+                            or (kind == "attr" and recv == ("name", "time"))):
+        return "time.sleep()"
+    if kind == "attr" and name == "join":
+        target = recv[1] if recv[0] in ("selfattr", "name") else ""
+        if THREADISH.search(target):
+            return f"{target}.join()"
+        return None
+    if kind == "attr" and name == "result" and site.n_args == 0 \
+            and not timed:
+        return f"{recv[1] or 'future'}.result() without timeout"
+    if kind == "attr" and name == "get" and site.n_args == 0 and not timed:
+        # dict.get always takes a key; a zero-arg .get() is a queue
+        return f"{recv[1] or '?'}.get() without timeout"
+    if kind == "attr" and name == "put" and not timed \
+            and recv[0] == "selfattr":
+        if _queue_bounded(la, cls_name, recv[1]):
+            return f"{recv[1]}.put() on a bounded queue without timeout"
+        return None
+    if kind == "attr" and name in SOCKET_BLOCKING:
+        return f"socket {name}()"
+    if kind == "self" and CALLBACK_SELF.match(name):
+        return f"user callback self.{name}()"
+    if kind == "name" and name in CALLBACK_NAME:
+        return f"user callback {name}()"
+    return None
+
+
+def _wait_reason(site: CallSite) -> str | None:
+    """Untimed ``.wait()``/``.wait_for()`` handling, held-sensitive:
+    waiting on the condition variable that is the *only* held lock is
+    the normal cv idiom (wait releases it); anything else held, or an
+    untimed wait on a non-held object (an Event), blocks for real."""
+    if site.kind != "attr" or site.name not in ("wait", "wait_for"):
+        return None
+    timed = "timeout" in site.kwnames or \
+        (site.name == "wait" and site.n_args >= 1) or \
+        (site.name == "wait_for" and site.n_args >= 2)
+    recv_tok = ("self", site.recv[1]) if site.recv[0] == "selfattr" else None
+    if recv_tok is not None and recv_tok in site.held:
+        others = [t for t in site.held if t != recv_tok]
+        if others:
+            return (f"{site.recv[1]}.{site.name}() releases only "
+                    f"{site.recv[1]} — still holding "
+                    + ", ".join(t[1] for t in others))
+        return None
+    if not timed:
+        return f"untimed {site.name}() while holding a lock"
+    return None
+
+
+class GuardAnalysis:
+    def __init__(self, la: LockAnalysis):
+        self.la = la
+
+    def run(self) -> list[Finding]:
+        out: list[Finding] = []
+        blocking = self._transitive_blocking()
+        for key, (mf, cf, facts) in self.la.funcs.items():
+            if cf is not None:
+                out.extend(self._check_guards(mf, cf, facts))
+                out.extend(self._check_locked_calls(mf, cf, facts))
+            out.extend(self._check_blocking(mf, cf, facts, blocking))
+        return out
+
+    # ----------------------------------------------------- guarded-by
+    def _check_guards(self, mf: ModuleFacts, cf: ClassFacts,
+                      facts) -> list[Finding]:
+        if facts.name == "__init__" or facts.name.endswith("_locked"):
+            return []
+        guards = _merged_guards(self.la, cf.name)
+        if not guards:
+            return []
+        out = []
+        seen = set()
+        for acc in facts.accesses:
+            lock = guards.get(acc.attr)
+            if lock is None or _holds(acc.held, lock):
+                continue
+            mode = "write" if acc.write else "read"
+            dedup = (acc.attr, acc.line, mode)
+            if dedup in seen:
+                continue
+            seen.add(dedup)
+            out.append(Finding(
+                rule="guarded-by", severity="error",
+                path=mf.path, line=acc.line, scope=facts.qualname,
+                subject=f"{cf.name}.{acc.attr}:{mode}:{facts.qualname}",
+                message=(f"{mode} of {acc.attr} (guarded-by {lock}) "
+                         f"outside `with self.{lock}:`")))
+        return out
+
+    def _check_locked_calls(self, mf: ModuleFacts, cf: ClassFacts,
+                            facts) -> list[Finding]:
+        """``self.foo_locked()`` requires some lock of the class held."""
+        if facts.name == "__init__" or facts.name.endswith("_locked"):
+            return []
+        lock_attrs = _class_lock_attrs(self.la, cf.name)
+        if not lock_attrs:
+            return []
+        out = []
+        for site in facts.calls:
+            if site.kind != "self" or not site.name.endswith("_locked"):
+                continue
+            if self.la.resolve_self_method(cf.name, site.name) is None:
+                continue
+            held_attrs = {t[1] for t in site.held if t[0] == "self"}
+            if held_attrs & lock_attrs:
+                continue
+            out.append(Finding(
+                rule="guarded-by", severity="error",
+                path=mf.path, line=site.line, scope=facts.qualname,
+                subject=f"call-unlocked:{cf.name}.{site.name}",
+                message=(f"self.{site.name}() called without holding any "
+                         f"lock of {cf.name} (the _locked suffix means "
+                         f"the caller must hold it)")))
+        return out
+
+    # ---------------------------------------------- blocking-under-lock
+    def _transitive_blocking(self) -> dict:
+        """func key -> (reason, depth) if the function blocks directly
+        or through same-instance calls."""
+        block: dict[str, str] = {}
+        for key, (mf, cf, facts) in self.la.funcs.items():
+            for site in facts.calls:
+                reason = _blocking_reason(site, self.la,
+                                          cf.name if cf else None)
+                if reason is None and site.kind == "attr" \
+                        and site.name in ("wait", "wait_for"):
+                    timed = "timeout" in site.kwnames or site.n_args >= 1
+                    if not timed:
+                        reason = f"untimed {site.name}()"
+                if reason is not None:
+                    block.setdefault(key, reason)
+                    break
+        callees: dict[str, set] = {}
+        for key, (mf, cf, facts) in self.la.funcs.items():
+            callees[key] = set()
+            if cf is None:
+                continue
+            for site in facts.calls:
+                if site.kind != "self":
+                    continue
+                tgt = self.la.resolve_self_method(cf.name, site.name)
+                if tgt is not None:
+                    callees[key].add(tgt)
+        changed = True
+        while changed:
+            changed = False
+            for key, outs in callees.items():
+                if key in block:
+                    continue
+                for g in outs:
+                    if g in block:
+                        block[key] = f"calls {g.split(':')[-1]} " \
+                                     f"({block[g]})"
+                        changed = True
+                        break
+        return block
+
+    def _check_blocking(self, mf: ModuleFacts, cf, facts,
+                        block: dict) -> list[Finding]:
+        out = []
+        cls_name = cf.name if cf is not None else None
+        seen = set()
+        for site in facts.calls:
+            if not site.held:
+                continue
+            reason = _blocking_reason(site, self.la, cls_name)
+            if reason is None:
+                reason = _wait_reason(site)
+            if reason is None and site.kind == "self" and cf is not None:
+                tgt = self.la.resolve_self_method(cf.name, site.name)
+                if tgt is not None and tgt in block \
+                        and not site.name.endswith("_locked"):
+                    reason = (f"self.{site.name}() blocks transitively: "
+                              f"{block[tgt]}")
+            if reason is None:
+                continue
+            held = ", ".join(t[1] for t in site.held)
+            dedup = (site.name, site.line)
+            if dedup in seen:
+                continue
+            seen.add(dedup)
+            out.append(Finding(
+                rule="blocking-under-lock", severity="error",
+                path=mf.path, line=site.line, scope=facts.qualname,
+                subject=f"{facts.qualname}:{site.name}:{held}",
+                message=f"{reason} while holding {held}"))
+        return out

@@ -1,0 +1,367 @@
+"""AST harvesting: per-module facts the checkers consume.
+
+One pass over each source file produces :class:`ModuleFacts`:
+
+* per class — lock/queue attribute creations (``self._lock =
+  threading.Lock()``), ``# guarded-by:`` declarations, ``__init__``
+  knob signatures, and per-method event streams;
+* per function/method — every attribute access, call site and lock
+  acquisition, each carrying the stack of locks held at that point.
+
+Lock tracking is lexical: a ``with self._lock:`` block pushes the
+token ``("self", "_lock")`` for its body; ``with mod_lock:`` pushes
+``("global", "mod_lock")``.  Nested ``def``s are harvested as separate
+functions with an *empty* held stack — their bodies run later, on
+whatever thread calls them, so the enclosing ``with`` proves nothing.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Optional
+
+from repro.analysis.model import Waiver, parse_comments
+
+LOCK_CTORS = {"Lock": "Lock", "RLock": "RLock", "Condition": "Condition"}
+
+#: ``with self.<attr>:`` is treated as a lock acquisition when the
+#: attribute was harvested as a lock, or failing that when its name
+#: looks lock-ish (covers fixture snippets and cross-class mixin use).
+LOCKISH_NAME = re.compile(r"lock|_cv$|^cv$|gate|cond", re.IGNORECASE)
+
+
+@dataclasses.dataclass(frozen=True)
+class Access:
+    attr: str
+    write: bool
+    line: int
+    held: tuple            # tuple of held tokens at this point
+
+
+@dataclasses.dataclass(frozen=True)
+class CallSite:
+    kind: str              # "self" | "name" | "attr" | "ctor"
+    name: str
+    recv: tuple            # ("selfattr", X) | ("name", n) | ("other", "")
+    line: int
+    held: tuple
+    n_args: int
+    kwnames: tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Acquire:
+    token: tuple           # ("self", attr) or ("global", name)
+    line: int
+    held: tuple            # held *before* this acquisition
+
+
+@dataclasses.dataclass
+class FuncFacts:
+    name: str
+    qualname: str          # "Class.method" / "func" / "Class.method.<inner>"
+    cls: Optional[str]
+    line: int
+    accesses: list = dataclasses.field(default_factory=list)
+    calls: list = dataclasses.field(default_factory=list)
+    acquires: list = dataclasses.field(default_factory=list)
+    global_names: set = dataclasses.field(default_factory=set)
+
+
+@dataclasses.dataclass
+class KnobParam:
+    name: str
+    line: int
+    kwonly: bool
+    has_default: bool
+    default_is_true: bool
+    default_repr: str
+
+
+@dataclasses.dataclass
+class ClassFacts:
+    name: str
+    line: int
+    bases: list
+    lock_attrs: dict = dataclasses.field(default_factory=dict)
+    queue_attrs: dict = dataclasses.field(default_factory=dict)  # attr->bounded
+    guards: dict = dataclasses.field(default_factory=dict)  # attr->(lock, line)
+    methods: dict = dataclasses.field(default_factory=dict)
+    class_attr_names: set = dataclasses.field(default_factory=set)
+    init_self_attrs: set = dataclasses.field(default_factory=set)
+    init_params: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ModuleFacts:
+    path: str
+    name: str
+    classes: dict = dataclasses.field(default_factory=dict)
+    functions: dict = dataclasses.field(default_factory=dict)
+    module_locks: dict = dataclasses.field(default_factory=dict)
+    waivers: list = dataclasses.field(default_factory=list)
+    guard_lines: dict = dataclasses.field(default_factory=dict)
+
+
+# --------------------------------------------------------------- helpers
+def _call_ctor_kind(node: ast.expr, names: dict) -> Optional[str]:
+    """If ``node`` is a ``threading.Lock()``-style call, its kind."""
+    if not isinstance(node, ast.Call):
+        return None
+    fn = node.func
+    if isinstance(fn, ast.Attribute) and fn.attr in names:
+        return names[fn.attr]
+    if isinstance(fn, ast.Name) and fn.id in names:
+        return names[fn.id]
+    return None
+
+
+def _queue_bound(node: ast.Call) -> Optional[bool]:
+    """Bounded-ness of a ``queue.Queue(...)`` call, or None if not one."""
+    fn = node.func
+    named = (isinstance(fn, ast.Attribute) and fn.attr == "Queue") or \
+            (isinstance(fn, ast.Name) and fn.id == "Queue")
+    if not named:
+        return None
+    args = list(node.args) + [kw.value for kw in node.keywords
+                              if kw.arg == "maxsize"]
+    if not args:
+        return False
+    a = args[0]
+    if isinstance(a, ast.Constant) and isinstance(a.value, int):
+        return a.value > 0
+    return True      # dynamic maxsize: assume bounded (puts can block)
+
+
+def _self_attr(node: ast.expr) -> Optional[str]:
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+class _FuncScanner(ast.NodeVisitor):
+    """Scan one function body, tracking the stack of held locks."""
+
+    def __init__(self, facts: FuncFacts, cls: Optional[ClassFacts],
+                 module_locks: dict, nested_sink: list):
+        self.f = facts
+        self.cls = cls
+        self.module_locks = module_locks
+        self.nested = nested_sink
+        self.held: list[tuple] = []
+
+    # -- lock identification ------------------------------------------
+    def _lock_token(self, expr: ast.expr) -> Optional[tuple]:
+        attr = _self_attr(expr)
+        if attr is not None:
+            if self.cls is not None and attr in self.cls.lock_attrs:
+                return ("self", attr)
+            if LOCKISH_NAME.search(attr):
+                return ("self", attr)
+            return None
+        if isinstance(expr, ast.Name):
+            if expr.id in self.module_locks or LOCKISH_NAME.search(expr.id):
+                return ("global", expr.id)
+        return None
+
+    # -- structure -----------------------------------------------------
+    def visit_With(self, node: ast.With):
+        pushed = 0
+        for item in node.items:
+            self.visit(item.context_expr)        # record accesses pre-push
+            if item.optional_vars is not None:
+                self.visit(item.optional_vars)
+            tok = self._lock_token(item.context_expr)
+            if tok is not None:
+                self.f.acquires.append(
+                    Acquire(tok, item.context_expr.lineno,
+                            tuple(self.held)))
+                self.held.append(tok)
+                pushed += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        for _ in range(pushed):
+            self.held.pop()
+
+    def visit_FunctionDef(self, node):       # nested def: harvest apart
+        self.nested.append(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node: ast.Lambda):
+        pass                                  # deferred body, held unknown
+
+    # -- events --------------------------------------------------------
+    def visit_Attribute(self, node: ast.Attribute):
+        attr = _self_attr(node)
+        if attr is not None:
+            self.f.accesses.append(Access(
+                attr=attr,
+                write=isinstance(node.ctx, (ast.Store, ast.Del)),
+                line=node.lineno,
+                held=tuple(self.held)))
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name):
+        if isinstance(node.ctx, ast.Load):
+            self.f.global_names.add(node.id)
+
+    def visit_Call(self, node: ast.Call):
+        fn = node.func
+        kwnames = tuple(kw.arg for kw in node.keywords if kw.arg)
+        n_args = len(node.args)
+        site = None
+        if isinstance(fn, ast.Attribute):
+            if isinstance(fn.value, ast.Name) and fn.value.id == "self":
+                site = CallSite("self", fn.attr, ("self", ""),
+                                node.lineno, tuple(self.held),
+                                n_args, kwnames)
+            else:
+                inner = _self_attr(fn.value)
+                if inner is not None:
+                    recv = ("selfattr", inner)
+                elif isinstance(fn.value, ast.Name):
+                    recv = ("name", fn.value.id)
+                else:
+                    recv = ("other", "")
+                site = CallSite("attr", fn.attr, recv, node.lineno,
+                                tuple(self.held), n_args, kwnames)
+            acq = self._acquire_target(fn)
+            if acq is not None:
+                self.f.acquires.append(
+                    Acquire(acq, node.lineno, tuple(self.held)))
+        elif isinstance(fn, ast.Name):
+            site = CallSite("name", fn.id, ("name", fn.id), node.lineno,
+                            tuple(self.held), n_args, kwnames)
+        if site is not None:
+            self.f.calls.append(site)
+        self.generic_visit(node)
+
+    def _acquire_target(self, fn: ast.Attribute) -> Optional[tuple]:
+        """``self.X.acquire()`` / ``lk.acquire()`` as an acquisition."""
+        if fn.attr != "acquire":
+            return None
+        return self._lock_token(fn.value)
+
+
+# ------------------------------------------------------------- harvesting
+def _scan_function(node, qualname: str, cls: Optional[ClassFacts],
+                   module_locks: dict, sink: dict):
+    facts = FuncFacts(name=node.name, qualname=qualname,
+                      cls=cls.name if cls else None, line=node.lineno)
+    nested: list = []
+    scanner = _FuncScanner(facts, cls, module_locks, nested)
+    for stmt in node.body:
+        scanner.visit(stmt)
+    sink[qualname] = facts
+    for inner in nested:
+        _scan_function(inner, f"{qualname}.{inner.name}", cls,
+                       module_locks, sink)
+
+
+def _harvest_init_params(node: ast.FunctionDef) -> list:
+    params: list[KnobParam] = []
+    args = node.args
+    pos = args.posonlyargs + args.args
+    defaults = list(args.defaults)
+    # defaults align with the tail of the positional params
+    pad = [None] * (len(pos) - len(defaults))
+    for a, d in zip(pos, pad + defaults):
+        if a.arg == "self":
+            continue
+        params.append(_knob(a, d, kwonly=False))
+    for a, d in zip(args.kwonlyargs, args.kw_defaults):
+        params.append(_knob(a, d, kwonly=True))
+    return params
+
+
+def _knob(a: ast.arg, default: Optional[ast.expr], kwonly: bool) -> KnobParam:
+    has = default is not None
+    is_true = (isinstance(default, ast.Constant)
+               and default.value is True)
+    rep = ast.unparse(default) if has else ""
+    return KnobParam(name=a.arg, line=a.lineno, kwonly=kwonly,
+                     has_default=has, default_is_true=is_true,
+                     default_repr=rep)
+
+
+def _prescan_class(node: ast.ClassDef, guard_lines: dict) -> ClassFacts:
+    """Pass 1 over a class: attribute inventory before method scans."""
+    cf = ClassFacts(name=node.name, line=node.lineno,
+                    bases=[ast.unparse(b) for b in node.bases])
+    for stmt in node.body:
+        if isinstance(stmt, ast.Assign):
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name):
+                    cf.class_attr_names.add(tgt.id)
+        elif isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target,
+                                                            ast.Name):
+            cf.class_attr_names.add(stmt.target.id)
+        elif isinstance(stmt, ast.FunctionDef):
+            cf.class_attr_names.add(stmt.name)
+            if stmt.name == "__init__":
+                cf.init_params = _harvest_init_params(stmt)
+            for sub in ast.walk(stmt):
+                if not isinstance(sub, (ast.Assign, ast.AnnAssign)):
+                    continue
+                targets = (sub.targets if isinstance(sub, ast.Assign)
+                           else [sub.target])
+                value = sub.value
+                for tgt in targets:
+                    attr = _self_attr(tgt)
+                    if attr is None:
+                        continue
+                    cf.init_self_attrs.add(attr)
+                    if value is not None:
+                        kind = _call_ctor_kind(value, LOCK_CTORS)
+                        if kind is not None:
+                            cf.lock_attrs[attr] = kind
+                        elif isinstance(value, ast.Call):
+                            b = _queue_bound(value)
+                            if b is not None:
+                                cf.queue_attrs[attr] = b
+                    end = getattr(sub, "end_lineno", sub.lineno)
+                    for ln in range(sub.lineno, end + 1):
+                        if ln in guard_lines:
+                            cf.guards[attr] = (guard_lines[ln], ln)
+    return cf
+
+
+def harvest_module(path: str, source: str,
+                   module_name: str) -> tuple[ModuleFacts, Optional[str]]:
+    """Parse + harvest one file.  Returns ``(facts, error)`` — on a
+    syntax error the facts are empty and ``error`` describes it."""
+    waivers, guard_lines = parse_comments(path, source)
+    mf = ModuleFacts(path=path, name=module_name, waivers=waivers,
+                     guard_lines=guard_lines)
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return mf, f"{type(e).__name__}: {e.msg} (line {e.lineno})"
+
+    # module-level locks first (with-statements on them resolve)
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            kind = _call_ctor_kind(stmt.value, LOCK_CTORS)
+            if kind is not None:
+                mf.module_locks[stmt.targets[0].id] = kind
+
+    for stmt in tree.body:
+        if isinstance(stmt, ast.ClassDef):
+            cf = _prescan_class(stmt, guard_lines)
+            mf.classes[cf.name] = cf
+            scanned: dict = {}
+            for sub in stmt.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    _scan_function(sub, f"{cf.name}.{sub.name}", cf,
+                                   mf.module_locks, scanned)
+            # keyed by bare name ("method", "method.inner") for MRO lookups
+            cf.methods = {k.split(".", 1)[1]: v for k, v in scanned.items()}
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            _scan_function(stmt, stmt.name, None, mf.module_locks,
+                           mf.functions)
+    return mf, None

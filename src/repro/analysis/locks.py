@@ -1,0 +1,335 @@
+"""Lock-order analysis: interprocedural acquisition graph + cycles.
+
+Locks are abstracted to their *attribute path* — ``Class._lock`` for
+``self._lock`` of that class, ``module:NAME`` for module-level locks.
+Every acquisition made while other locks are held contributes edges
+``held -> acquired``; call sites propagate the callee's transitive
+acquisition set, so an edge also appears when a method holds lock A
+and calls (possibly through several hops) something that takes lock B.
+
+Call resolution is deliberately conservative to keep the graph free of
+junk edges: ``self.m()`` resolves through the harvested MRO,
+``f()`` resolves to a module-level function of the same module or a
+harvested class constructor, and ``obj.m()`` resolves only when ``m``
+names exactly one harvested method repo-wide and is not a blacklisted
+common name (``get``, ``put``, ``submit``, ...).  The result is an
+under-approximation: absence of a cycle is not a proof, but every
+reported cycle corresponds to a concrete acquisition chain.
+
+Two finding families come out of this graph:
+
+* ``lock-order`` — a strongly connected component of two or more lock
+  nodes (an AB-BA ordering exists somewhere in the code);
+* ``lock-reentrant`` — the same *instance* lock acquired again, via
+  nesting or same-``self`` calls, through a non-reentrant type.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.harvest import ClassFacts, ModuleFacts
+from repro.analysis.model import Finding
+
+#: attribute-call names never resolved by global uniqueness: too
+#: generic, shadowed by stdlib containers all over the tree.
+COMMON_NAMES = frozenset({
+    "get", "put", "get_nowait", "put_nowait", "items", "keys", "values",
+    "append", "pop", "popitem", "add", "remove", "discard", "clear",
+    "update", "copy", "setdefault", "extend", "insert", "sort", "index",
+    "count", "join", "split", "strip", "format", "encode", "decode",
+    "result", "wait", "wait_for", "notify", "notify_all", "acquire",
+    "release", "start", "set", "is_set", "qsize", "empty", "full",
+    "close", "cancel", "done", "submit", "shutdown", "stats", "read",
+    "write", "send", "recv", "flush", "next", "group", "match", "search",
+})
+
+
+@dataclasses.dataclass
+class Edge:
+    src: str
+    dst: str
+    path: str
+    line: int
+    via: str               # scope where the edge was observed
+
+
+class LockGraph:
+    def __init__(self):
+        self.edges: dict[tuple, Edge] = {}
+        self.nodes: set[str] = set()
+
+    def add(self, src: str, dst: str, path: str, line: int, via: str):
+        self.nodes.update((src, dst))
+        if src != dst:
+            self.edges.setdefault((src, dst), Edge(src, dst, path, line, via))
+
+    def to_dot(self) -> str:
+        out = ["digraph lock_order {",
+               '  rankdir=LR;',
+               '  node [shape=box, fontname="monospace", fontsize=10];']
+        for n in sorted(self.nodes):
+            out.append(f'  "{n}";')
+        for (src, dst), e in sorted(self.edges.items()):
+            out.append(f'  "{src}" -> "{dst}" '
+                       f'[label="{e.via}\\n{e.path}:{e.line}", fontsize=8];')
+        out.append("}")
+        return "\n".join(out) + "\n"
+
+    def sccs(self) -> list[list[str]]:
+        """Strongly connected components with >= 2 nodes (Tarjan)."""
+        index: dict[str, int] = {}
+        low: dict[str, int] = {}
+        on: set[str] = set()
+        stack: list[str] = []
+        out: list[list[str]] = []
+        succs: dict[str, list[str]] = {}
+        for (s, d) in self.edges:
+            succs.setdefault(s, []).append(d)
+        counter = [0]
+
+        def strong(v: str):
+            # iterative Tarjan: explicit frame stack
+            frames = [(v, iter(succs.get(v, ())))]
+            index[v] = low[v] = counter[0]
+            counter[0] += 1
+            stack.append(v)
+            on.add(v)
+            while frames:
+                node, it = frames[-1]
+                advanced = False
+                for w in it:
+                    if w not in index:
+                        index[w] = low[w] = counter[0]
+                        counter[0] += 1
+                        stack.append(w)
+                        on.add(w)
+                        frames.append((w, iter(succs.get(w, ()))))
+                        advanced = True
+                        break
+                    if w in on:
+                        low[node] = min(low[node], index[w])
+                if advanced:
+                    continue
+                frames.pop()
+                if frames:
+                    parent = frames[-1][0]
+                    low[parent] = min(low[parent], low[node])
+                if low[node] == index[node]:
+                    comp = []
+                    while True:
+                        w = stack.pop()
+                        on.discard(w)
+                        comp.append(w)
+                        if w == node:
+                            break
+                    if len(comp) > 1:
+                        out.append(sorted(comp))
+
+        for n in sorted(self.nodes):
+            if n not in index:
+                strong(n)
+        return out
+
+
+class LockAnalysis:
+    """Build call graph + lock graph over all harvested modules."""
+
+    def __init__(self, modules: list[ModuleFacts]):
+        self.modules = modules
+        self.class_index: dict[str, tuple[ModuleFacts, ClassFacts]] = {}
+        self.method_index: dict[str, list[tuple]] = {}
+        self.funcs: dict[str, tuple] = {}   # key -> (mf, cf|None, facts)
+        for mf in modules:
+            for cf in mf.classes.values():
+                self.class_index.setdefault(cf.name, (mf, cf))
+                for mname, facts in cf.methods.items():
+                    key = f"{mf.name}:{cf.name}.{mname}"
+                    self.funcs[key] = (mf, cf, facts)
+                    if "." not in mname:
+                        self.method_index.setdefault(mname, []).append(
+                            (cf.name, key))
+            for fname, facts in mf.functions.items():
+                self.funcs[f"{mf.name}:{fname}"] = (mf, None, facts)
+
+    # ------------------------------------------------------------- MRO
+    def mro(self, cls_name: str) -> list[ClassFacts]:
+        out, seen, todo = [], set(), [cls_name]
+        while todo:
+            nm = todo.pop(0)
+            if nm in seen or nm not in self.class_index:
+                continue
+            seen.add(nm)
+            cf = self.class_index[nm][1]
+            out.append(cf)
+            todo.extend(b.split("[")[0].split(".")[-1] for b in cf.bases)
+        return out
+
+    def resolve_self_method(self, cls_name: str, meth: str):
+        for cf in self.mro(cls_name):
+            if meth in cf.methods:
+                mf = self.class_index[cf.name][0]
+                return f"{mf.name}:{cf.name}.{meth}"
+        return None
+
+    def lock_kind(self, cls_name: str, attr: str) -> str:
+        for cf in self.mro(cls_name):
+            if attr in cf.lock_attrs:
+                return cf.lock_attrs[attr]
+        return "Lock"
+
+    # ------------------------------------------------------- resolution
+    def lock_node(self, token: tuple, mf: ModuleFacts,
+                  cf: ClassFacts | None) -> str:
+        scope, name = token
+        if scope == "self" and cf is not None:
+            # attribute the lock to the class that creates it, so mixin
+            # locks are one node across every subclass
+            for base in self.mro(cf.name):
+                if name in base.lock_attrs:
+                    return f"{base.name}.{name}"
+            return f"{cf.name}.{name}"
+        if scope == "global":
+            return f"{mf.name}:{name}"
+        return f"?{name}"
+
+    def resolve_call(self, site, mf: ModuleFacts, cf: ClassFacts | None):
+        """Call site -> function key, or None when unresolvable."""
+        if site.kind == "self" and cf is not None:
+            return self.resolve_self_method(cf.name, site.name)
+        if site.kind == "name":
+            if site.name in mf.functions:
+                return f"{mf.name}:{site.name}"
+            if site.name in self.class_index:
+                tmf, tcf = self.class_index[site.name]
+                if "__init__" in tcf.methods:
+                    return f"{tmf.name}:{tcf.name}.__init__"
+            return None
+        if site.kind == "attr":
+            if site.name in COMMON_NAMES or site.name.startswith("__"):
+                return None
+            cands = self.method_index.get(site.name, ())
+            if len(cands) == 1:
+                return cands[0][1]
+        return None
+
+    # --------------------------------------------------------- fixpoint
+    def transitive_acquires(self) -> dict:
+        """func key -> set of lock nodes it may take, transitively."""
+        acq: dict[str, set] = {}
+        callees: dict[str, set] = {}
+        for key, (mf, cf, facts) in self.funcs.items():
+            acq[key] = {self.lock_node(a.token, mf, cf)
+                        for a in facts.acquires}
+            callees[key] = set()
+            for site in facts.calls:
+                tgt = self.resolve_call(site, mf, cf)
+                if tgt is not None and tgt in self.funcs:
+                    callees[key].add(tgt)
+        changed = True
+        while changed:
+            changed = False
+            for key, outs in callees.items():
+                base = acq[key]
+                for g in outs:
+                    extra = acq[g] - base
+                    if extra:
+                        base |= extra
+                        changed = True
+        return acq
+
+    def self_acquire_attrs(self) -> dict:
+        """func key -> set of *self lock attr names* acquired through
+        same-instance call chains only (reentrancy detection)."""
+        acq: dict[str, set] = {}
+        callees: dict[str, set] = {}
+        for key, (mf, cf, facts) in self.funcs.items():
+            acq[key] = {a.token[1] for a in facts.acquires
+                        if a.token[0] == "self"}
+            callees[key] = set()
+            if cf is None:
+                continue
+            for site in facts.calls:
+                if site.kind != "self":
+                    continue
+                tgt = self.resolve_self_method(cf.name, site.name)
+                if tgt is not None:
+                    callees[key].add(tgt)
+        changed = True
+        while changed:
+            changed = False
+            for key, outs in callees.items():
+                base = acq[key]
+                for g in outs:
+                    extra = acq[g] - base
+                    if extra:
+                        base |= extra
+                        changed = True
+        return acq
+
+    # ------------------------------------------------------------- main
+    def run(self) -> tuple[list[Finding], LockGraph]:
+        findings: list[Finding] = []
+        graph = LockGraph()
+        trans = self.transitive_acquires()
+        self_acq = self.self_acquire_attrs()
+
+        for key, (mf, cf, facts) in self.funcs.items():
+            scope = facts.qualname
+            # direct nesting edges + direct reentrancy
+            for a in facts.acquires:
+                node = self.lock_node(a.token, mf, cf)
+                held = [self.lock_node(t, mf, cf) for t in a.held]
+                for h in held:
+                    graph.add(h, node, mf.path, a.line, scope)
+                if a.token in a.held:
+                    kind = (self.lock_kind(cf.name, a.token[1])
+                            if cf is not None and a.token[0] == "self"
+                            else mf.module_locks.get(a.token[1], "Lock"))
+                    if kind != "RLock":
+                        findings.append(Finding(
+                            rule="lock-reentrant", severity="error",
+                            path=mf.path, line=a.line, scope=scope,
+                            subject=f"nested:{node}",
+                            message=(f"{node} ({kind}) re-acquired while "
+                                     f"already held — self-deadlock")))
+            # interprocedural edges + reentrancy through self calls
+            for site in facts.calls:
+                if not site.held:
+                    continue
+                tgt = self.resolve_call(site, mf, cf)
+                if tgt is None or tgt not in self.funcs:
+                    continue
+                held_nodes = [self.lock_node(t, mf, cf) for t in site.held]
+                for l2 in trans.get(tgt, ()):
+                    for l1 in held_nodes:
+                        graph.add(l1, l2, mf.path, site.line, scope)
+                if site.kind == "self" and cf is not None:
+                    held_self = {t[1] for t in site.held if t[0] == "self"}
+                    for attr in held_self & self_acq.get(tgt, set()):
+                        if self.lock_kind(cf.name, attr) != "RLock":
+                            node = self.lock_node(("self", attr), mf, cf)
+                            findings.append(Finding(
+                                rule="lock-reentrant", severity="error",
+                                path=mf.path, line=site.line, scope=scope,
+                                subject=f"call:{node}:{site.name}",
+                                message=(
+                                    f"calls self.{site.name}() which "
+                                    f"re-acquires {node} already held "
+                                    f"here — self-deadlock")))
+
+        for comp in graph.sccs():
+            # anchor the finding at one concrete edge inside the cycle
+            anchor = None
+            for (s, d), e in sorted(graph.edges.items()):
+                if s in comp and d in comp:
+                    anchor = e
+                    break
+            findings.append(Finding(
+                rule="lock-order", severity="error",
+                path=anchor.path if anchor else "",
+                line=anchor.line if anchor else 0,
+                scope=anchor.via if anchor else "<graph>",
+                subject="cycle:" + ",".join(comp),
+                message=("lock-order cycle (potential deadlock): "
+                         + " <-> ".join(comp))))
+        return findings, graph

@@ -1,0 +1,138 @@
+"""Findings, fingerprints, and the comment grammars.
+
+Two comment grammars are recognized, both line-anchored:
+
+``# guarded-by: <lock_attr>``
+    On (or at the end of) a ``self.<attr> = ...`` assignment: declares
+    that ``self.<attr>`` may only be read or written while ``with
+    self.<lock_attr>:`` is held on the same object.
+
+``# analysis: ok(<rule>) — <reason>``
+    Waives findings of ``<rule>`` on this line (or, for a standalone
+    comment line, on the next source line).  The runner verifies every
+    waiver is load-bearing: a waiver that matches no finding is
+    reported as ``useless-waiver``.
+
+Fingerprints are stable across line drift: they hash the rule, file
+path, enclosing scope and a *subject* key built from the names
+involved — never line numbers — so a checked-in baseline survives
+unrelated edits above a finding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import re
+import tokenize
+
+#: Every rule id the analyzer can emit (waivers must name one of these).
+RULES = (
+    "lock-order",
+    "lock-reentrant",
+    "guarded-by",
+    "blocking-under-lock",
+    "knob-inert",
+    "backend-protocol",
+    "useless-waiver",
+    "parse-error",
+)
+
+WAIVER_RE = re.compile(
+    r"#\s*analysis:\s*ok\(\s*([a-z][a-z-]*)\s*\)"
+    r"(?:\s*(?:—|–|--|-)\s*(?P<reason>.*?))?\s*$")
+GUARD_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][A-Za-z0-9_]*)\s*$")
+
+
+def _sha(text: str) -> str:
+    return hashlib.sha1(text.encode("utf-8")).hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer finding, pinned to a file:line with a stable id."""
+
+    rule: str
+    severity: str          # "error" | "warning"
+    path: str              # posix path as given to the analyzer
+    line: int
+    scope: str             # "Class.method", "Class", or "<module>"
+    subject: str           # stable key: names involved, no line numbers
+    message: str
+
+    @property
+    def fingerprint(self) -> str:
+        key = f"{self.rule}|{self.path}|{self.scope}|{self.subject}"
+        return _sha(key)[:16]
+
+    def to_dict(self) -> dict:
+        return {
+            "rule": self.rule,
+            "severity": self.severity,
+            "path": self.path,
+            "line": self.line,
+            "scope": self.scope,
+            "subject": self.subject,
+            "message": self.message,
+            "fingerprint": self.fingerprint,
+        }
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: {self.severity} {self.rule} "
+                f"[{self.fingerprint}] {self.scope}: {self.message}")
+
+
+@dataclasses.dataclass
+class Waiver:
+    """One ``# analysis: ok(rule)`` comment and what it covers."""
+
+    rule: str
+    reason: str
+    path: str
+    line: int              # line the comment sits on
+    applies_to: int        # line whose findings it suppresses
+    source_key: str        # hash of the waived source line (stable id)
+    used: bool = False
+
+
+def parse_comments(path: str, source: str) -> tuple[list[Waiver],
+                                                    dict[int, str]]:
+    """Extract waivers and guarded-by annotations from source text.
+
+    Returns ``(waivers, guards_by_line)`` where ``guards_by_line`` maps
+    a 1-based line number to the lock attribute it declares.
+    """
+    waivers: list[Waiver] = []
+    guards: dict[int, str] = {}
+    lines = source.splitlines()
+    # real COMMENT tokens only — grammar examples quoted in docstrings
+    # must not register as annotations
+    comments: list[tuple[int, str]] = []
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                comments.append((tok.start[0], tok.string))
+    except (tokenize.TokenizeError, SyntaxError, IndentationError):
+        return waivers, guards   # harvest reports the parse error
+    for i, text in comments:
+        m = GUARD_RE.search(text)
+        if m:
+            guards[i] = m.group(1)
+        m = WAIVER_RE.search(text)
+        if not m:
+            continue
+        # a standalone comment line waives the next source line; an
+        # end-of-line comment waives its own line
+        raw = lines[i - 1] if i <= len(lines) else ""
+        standalone = raw.strip().startswith("#")
+        applies = i + 1 if standalone else i
+        anchor = lines[applies - 1].strip() if applies <= len(lines) else ""
+        waivers.append(Waiver(
+            rule=m.group(1),
+            reason=(m.group("reason") or "").strip(),
+            path=path,
+            line=i,
+            applies_to=applies,
+            source_key=_sha(anchor)[:8],
+        ))
+    return waivers, guards

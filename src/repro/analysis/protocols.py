@@ -1,0 +1,139 @@
+"""Backend protocol conformance.
+
+A *registered backend* is any harvested class that (a) subclasses
+``Backend`` or ``OffloadInboxMixin`` (transitively, by name through
+the harvested MRO), or (b) is named ``*Backend`` — the structural
+backends (``UDFBatcherBackend``, ``DeviceBackend``,
+``MultiDeviceBackend``) satisfy the protocol without subclassing, so
+name is the only static registration signal for them.
+
+Checked surface (all resolved through the harvested MRO):
+
+* the router protocol: ``can_run``, ``estimate``, ``queue_depth``
+  methods and a ``name`` (class attribute or set in ``__init__``);
+* ``estimate_resident`` implies ``resident_capable`` is defined;
+* offload backends (``OffloadInboxMixin`` in the MRO) must call
+  ``self._init_inbox()`` in ``__init__``, provide ``_run_groups``,
+  and ship a worker of their own that honors the shutdown contract —
+  references the ``OFFLOAD_STOP`` pill AND calls
+  ``self._drain_after_stop()`` (work accepted before the close is
+  executed, never dropped);
+* a class that hand-rolls part of the offload surface (``submit`` /
+  ``pending`` / ``shutdown``) without the mixin must provide all
+  three — a partial surface means the engine's teardown path will
+  call a method that does not exist.
+"""
+from __future__ import annotations
+
+from repro.analysis.locks import LockAnalysis
+from repro.analysis.model import Finding
+
+ROUTER_METHODS = ("can_run", "estimate", "queue_depth")
+OFFLOAD_SURFACE = ("submit", "pending", "shutdown")
+EXEMPT = {"Backend", "OffloadInboxMixin"}
+
+
+def _registered(la: LockAnalysis) -> list[str]:
+    names = []
+    for cls_name in la.class_index:
+        if cls_name in EXEMPT or cls_name.startswith("_"):
+            continue
+        mro = {c.name for c in la.mro(cls_name)}
+        if cls_name.endswith("Backend") or (mro & EXEMPT):
+            names.append(cls_name)
+    return sorted(names)
+
+
+def _defines(la: LockAnalysis, cls_name: str, member: str,
+             skip=frozenset()) -> bool:
+    for cf in la.mro(cls_name):
+        if cf.name in skip:
+            continue
+        if member in cf.methods or member in cf.class_attr_names \
+                or member in cf.init_self_attrs:
+            return True
+    return False
+
+
+def check_protocols(la: LockAnalysis) -> list[Finding]:
+    out: list[Finding] = []
+    for cls_name in _registered(la):
+        mf, cf = la.class_index[cls_name]
+        mro_names = {c.name for c in la.mro(cls_name)}
+
+        def finding(subject: str, message: str, line: int | None = None):
+            out.append(Finding(
+                rule="backend-protocol", severity="error",
+                path=mf.path, line=line if line is not None else cf.line,
+                scope=cls_name, subject=f"{cls_name}:{subject}",
+                message=message))
+
+        for meth in ROUTER_METHODS:
+            # an abstractmethod on the Backend ABC satisfies nothing for
+            # the subclass, but harvested methods don't carry decorator
+            # info for bases outside the tree — accept MRO presence,
+            # which matches how the ABC enforces it at class-creation
+            if not _defines(la, cls_name, meth):
+                finding(f"missing:{meth}",
+                        f"backend {cls_name} does not implement "
+                        f"{meth}() (Backend protocol)")
+        if not _defines(la, cls_name, "name"):
+            finding("missing:name",
+                    f"backend {cls_name} has no `name` (class attribute "
+                    f"or set in __init__)")
+        if _defines(la, cls_name, "estimate_resident",
+                    skip={"Backend"}) and \
+                not _defines(la, cls_name, "resident_capable"):
+            finding("missing:resident_capable",
+                    f"{cls_name} implements estimate_resident() but "
+                    f"defines no resident_capable flag")
+
+        if "OffloadInboxMixin" in mro_names:
+            init = None
+            for base in la.mro(cls_name):
+                if "__init__" in base.methods:
+                    init = base.methods["__init__"]
+                    break
+            calls_init_inbox = init is not None and any(
+                s.kind == "self" and s.name == "_init_inbox"
+                for s in init.calls)
+            if not calls_init_inbox:
+                finding("offload:init-inbox",
+                        f"{cls_name}.__init__ never calls "
+                        f"self._init_inbox() — inbox/gate/closed state "
+                        f"is missing")
+            if not _defines(la, cls_name, "_run_groups",
+                            skip={"OffloadInboxMixin"}):
+                finding("offload:run-groups",
+                        f"{cls_name} provides no _run_groups() — the "
+                        f"post-join drain has nothing to execute")
+            # the worker the class ships must honor the pill + drain
+            # (mixin methods don't count: they are the *callers* of the
+            # contract, not the worker side)
+            honors = False
+            for base in la.mro(cls_name):
+                if base.name == "OffloadInboxMixin":
+                    continue
+                for facts in base.methods.values():
+                    sees_pill = "OFFLOAD_STOP" in facts.global_names
+                    drains = any(s.kind == "self"
+                                 and s.name == "_drain_after_stop"
+                                 for s in facts.calls)
+                    if sees_pill and drains:
+                        honors = True
+            if not honors:
+                finding("offload:pill-drain",
+                        f"no worker method of {cls_name} both checks the "
+                        f"OFFLOAD_STOP pill and calls "
+                        f"_drain_after_stop() — shutdown would hang or "
+                        f"drop accepted work")
+        else:
+            have = [m for m in OFFLOAD_SURFACE
+                    if _defines(la, cls_name, m)]
+            if have and len(have) != len(OFFLOAD_SURFACE):
+                missing = sorted(set(OFFLOAD_SURFACE) - set(have))
+                finding("offload:partial",
+                        f"{cls_name} hand-rolls {sorted(have)} without "
+                        f"OffloadInboxMixin but lacks {missing} — the "
+                        f"offload surface must be all-or-nothing")
+    return out

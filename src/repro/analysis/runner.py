@@ -1,0 +1,195 @@
+"""Orchestration: harvest -> checks -> waivers -> baseline.
+
+``run_analysis`` is the programmatic entry point (the CLI in
+``__main__`` and ``tests/test_analysis.py`` both go through it).  The
+flow: collect ``.py`` files, harvest each, run the four check
+families, apply inline waivers (marking each as used), then convert
+every *unused* waiver into a ``useless-waiver`` finding so stale
+waivers cannot accumulate.
+
+Baselines: ``analysis_baseline.json`` holds the fingerprints of
+accepted findings.  ``check_baseline`` partitions current findings
+into new vs. baselined and also reports stale baseline entries
+(fingerprints that no longer fire), so the file can be kept tight.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from repro.analysis.guards import GuardAnalysis
+from repro.analysis.harvest import harvest_module
+from repro.analysis.knobs import KNOB_CLASSES, check_knobs
+from repro.analysis.locks import LockAnalysis, LockGraph
+from repro.analysis.model import RULES, Finding
+from repro.analysis.protocols import check_protocols
+
+BASELINE_VERSION = 1
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    findings: list          # live findings, post-waiver
+    suppressed: list        # (finding, waiver) pairs
+    graph: LockGraph
+    files: int
+
+    def to_dict(self) -> dict:
+        return {
+            "files": self.files,
+            "findings": [f.to_dict() for f in self.findings],
+            "suppressed": [
+                {"finding": f.to_dict(),
+                 "waiver_line": w.line, "reason": w.reason}
+                for f, w in self.suppressed],
+            "lock_graph": {
+                "nodes": sorted(self.graph.nodes),
+                "edges": [
+                    {"src": e.src, "dst": e.dst, "via": e.via,
+                     "site": f"{e.path}:{e.line}"}
+                    for e in self.graph.edges.values()],
+            },
+        }
+
+
+def iter_py_files(paths):
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if d != "__pycache__" and not d.startswith("."))
+            for fn in sorted(files):
+                if fn.endswith(".py"):
+                    yield os.path.join(root, fn)
+
+
+def _module_name(path: str) -> str:
+    norm = path.replace(os.sep, "/")
+    if "/src/" in norm:
+        norm = norm.split("/src/", 1)[1]
+    elif norm.startswith("src/"):
+        norm = norm[4:]
+    return norm[:-3].replace("/", ".").lstrip(".")
+
+
+def _ref_corpus(ref_dirs) -> str:
+    chunks = []
+    for d in ref_dirs:
+        for path in iter_py_files([d]):
+            try:
+                with open(path, "r", encoding="utf-8") as fh:
+                    chunks.append(fh.read())
+            except OSError:
+                continue
+    return "\n".join(chunks)
+
+
+def run_analysis(paths, *, ref_dirs=(), knob_classes=KNOB_CLASSES,
+                 ) -> AnalysisResult:
+    modules = []
+    findings: list[Finding] = []
+    files = 0
+    for path in iter_py_files(paths):
+        files += 1
+        try:
+            with open(path, "r", encoding="utf-8") as fh:
+                source = fh.read()
+        except OSError as e:
+            findings.append(Finding(
+                rule="parse-error", severity="error", path=path, line=0,
+                scope="<module>", subject="unreadable",
+                message=f"cannot read: {e}"))
+            continue
+        mf, err = harvest_module(path, source, _module_name(path))
+        if err is not None:
+            findings.append(Finding(
+                rule="parse-error", severity="error", path=path, line=0,
+                scope="<module>", subject="syntax",
+                message=f"cannot parse: {err}"))
+            continue
+        modules.append(mf)
+
+    la = LockAnalysis(modules)
+    lock_findings, graph = la.run()
+    findings.extend(lock_findings)
+    findings.extend(GuardAnalysis(la).run())
+    findings.extend(check_knobs(modules, _ref_corpus(ref_dirs),
+                                knob_classes))
+    findings.extend(check_protocols(la))
+
+    # ------------------------------------------------------- waivers
+    waivers = [w for mf in modules for w in mf.waivers]
+    by_site = {}
+    for w in waivers:
+        by_site.setdefault((w.path, w.applies_to, w.rule), []).append(w)
+    live: list[Finding] = []
+    suppressed: list = []
+    for f in findings:
+        ws = by_site.get((f.path, f.line, f.rule))
+        if ws:
+            for w in ws:
+                w.used = True
+            suppressed.append((f, ws[0]))
+        else:
+            live.append(f)
+    for w in waivers:
+        if w.rule not in RULES:
+            live.append(Finding(
+                rule="useless-waiver", severity="error", path=w.path,
+                line=w.line, scope="<module>",
+                subject=f"unknown-rule:{w.rule}:{w.source_key}",
+                message=f"waiver names unknown rule {w.rule!r} "
+                        f"(known: {', '.join(RULES)})"))
+        elif not w.used:
+            live.append(Finding(
+                rule="useless-waiver", severity="error", path=w.path,
+                line=w.line, scope="<module>",
+                subject=f"{w.rule}:{w.source_key}",
+                message=(f"waiver ok({w.rule}) suppresses no finding — "
+                         f"remove it (or it is on the wrong line)")))
+
+    live.sort(key=lambda f: (f.path, f.line, f.rule, f.subject))
+    return AnalysisResult(findings=live, suppressed=suppressed,
+                          graph=graph, files=files)
+
+
+# ------------------------------------------------------------- baseline
+def load_baseline(path: str) -> dict:
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(f"unsupported baseline version in {path!r}")
+    return data
+
+
+def baseline_fingerprints(data: dict) -> set:
+    return {entry["fingerprint"] for entry in data.get("findings", [])}
+
+
+def write_baseline(path: str, result: AnalysisResult) -> None:
+    data = {
+        "version": BASELINE_VERSION,
+        "comment": ("Accepted pre-existing findings; the CI gate fails "
+                    "only on fingerprints not listed here.  Prefer "
+                    "fixing or waiving over baselining."),
+        "findings": [
+            {"fingerprint": f.fingerprint, "rule": f.rule, "path": f.path,
+             "scope": f.scope, "subject": f.subject}
+            for f in result.findings],
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(data, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def check_baseline(result: AnalysisResult,
+                   baseline: dict) -> tuple[list, list]:
+    """-> (new_findings, stale_fingerprints)."""
+    accepted = baseline_fingerprints(baseline)
+    current = {f.fingerprint for f in result.findings}
+    new = [f for f in result.findings if f.fingerprint not in accepted]
+    stale = sorted(accepted - current)
+    return new, stale

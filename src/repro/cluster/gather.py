@@ -91,24 +91,25 @@ class ClusterQuery:
         self._deadline = (time.monotonic() + timeout_s
                           if timeout_s is not None else None)
         self._cv = threading.Condition()
-        self._state = _RUNNING
+        self._state = _RUNNING               # guarded-by: _cv
         self._phases = group_phases(cmds)
         self._phase = -1
-        self._outstanding = 0
-        self._live: set[_Piece] = set()      # submitted, not yet settled
-        self._issued: set[tuple] = set()     # (cmd, owner, shard) dedup
+        self._outstanding = 0                # guarded-by: _cv
+        self._live: set[_Piece] = set()      # not yet settled  # guarded-by: _cv
+        self._issued: set[tuple] = set()     # scatter dedup  # guarded-by: _cv
         self._collected: dict[int, dict[str, Any]] = {
-            i: {} for i in range(len(cmds))}
-        self._streamed: set[tuple] = set()   # (cmd, eid) already streamed
-        self._add_state: dict[int, dict] = {}
-        self.stats: dict[str, Any] = {"matched": 0, "failed": 0}
+            i: {} for i in range(len(cmds))}                 # guarded-by: _cv
+        self._streamed: set[tuple] = set()   # streamed once  # guarded-by: _cv
+        self._add_state: dict[int, dict] = {}                # guarded-by: _cv
+        self.stats: dict[str, Any] = \
+            {"matched": 0, "failed": 0}                      # guarded-by: _cv
         if engine._shards_have_cache:
             self.stats["cache_full_hits"] = 0
             self.stats["cache_prefix_hits"] = 0
         self._t0 = time.monotonic()
-        self._result: dict | None = None
-        self._exc: BaseException | None = None
-        self._done_cbs: list[Callable[[], None]] = []
+        self._result: dict | None = None                     # guarded-by: _cv
+        self._exc: BaseException | None = None               # guarded-by: _cv
+        self._done_cbs: list[Callable[[], None]] = []        # guarded-by: _cv
 
     # ------------------------------------------------------------- drive
     def start(self):
@@ -416,11 +417,13 @@ class ClusterQuery:
     def result(self, timeout: float | None = None) -> dict:
         if not self.wait(timeout):
             raise TimeoutError(f"query {self.qid} timed out")
-        if self._state is _CANCELLED:
+        with self._cv:
+            state, exc, result = self._state, self._exc, self._result
+        if state is _CANCELLED:
             raise CancelledError(f"query {self.qid} cancelled")
-        if self._exc is not None:
-            raise self._exc
-        return self._result
+        if exc is not None:
+            raise exc
+        return result
 
     def outcome(self) -> tuple[str, Any]:
         with self._cv:
@@ -446,11 +449,13 @@ class ClusterQuery:
 
     @property
     def state(self) -> str:
-        return self._state
+        with self._cv:
+            return self._state
 
     @property
     def is_cancelled(self) -> bool:
-        return self._state is _CANCELLED
+        with self._cv:
+            return self._state is _CANCELLED
 
 
 class ClusterFuture:

@@ -163,6 +163,7 @@ class VDMSAsyncEngine:
                  batch_remote: int = 1,
                  dispatch_policy: str = "round_robin",
                  num_native_workers: int | None = None,
+                 # analysis: ok(knob-inert) — deliberate: FIFO starvation is a known seed defect; fairness-off is the opt-out
                  fair_scheduling: bool = True,
                  cache_capacity: int = 0,
                  cache_capacity_bytes: int = 256 << 20,

@@ -112,13 +112,14 @@ class BusyMeter:
 
     def __init__(self, window: int = 4096):
         self.window = window
-        self.intervals: collections.deque[tuple[float, float]] = collections.deque()
-        self._t0: float | None = None
+        self.intervals: collections.deque[tuple[float, float]] = \
+            collections.deque()         # guarded-by: _lock
+        self._t0: float | None = None   # owner thread only
         self._lock = threading.Lock()   # owner thread writes, readers poll
-        self.total_busy_s = 0.0
-        self.total_intervals = 0
-        self._evicted_busy_s = 0.0
-        self._evicted_until = 0.0
+        self.total_busy_s = 0.0         # guarded-by: _lock
+        self.total_intervals = 0        # guarded-by: _lock
+        self._evicted_busy_s = 0.0      # guarded-by: _lock
+        self._evicted_until = 0.0       # guarded-by: _lock
 
     def start(self):
         self._t0 = time.monotonic()
@@ -190,11 +191,12 @@ class FairQueue:
     def __init__(self, fair: bool = True):
         self.fair = fair
         self._cv = threading.Condition()
-        self._lanes: dict[str, collections.deque] = {}
-        self._rr: collections.deque[str] = collections.deque()  # lane rotation
-        self._fifo: collections.deque = collections.deque()
-        self._counts: dict[str, int] = {}   # live entities per query lane
-        self._closed = False
+        self._lanes: dict[str, collections.deque] = {}  # guarded-by: _cv
+        self._rr: collections.deque[str] = \
+            collections.deque()             # lane rotation  # guarded-by: _cv
+        self._fifo: collections.deque = collections.deque()  # guarded-by: _cv
+        self._counts: dict[str, int] = {}   # per-query live  # guarded-by: _cv
+        self._closed = False                # guarded-by: _cv
 
     def put(self, ent: Entity):
         self.put_many((ent,))

@@ -268,19 +268,19 @@ class RemoteServerPool:
         self._rr = itertools.count()
         self._rid = itertools.count()
         self._lock = threading.Lock()
-        self.inflight: dict[int, Request] = {}
-        self._retry_heap: list[tuple[float, int]] = []  # (due, rid)
+        self.inflight: dict[int, Request] = {}          # guarded-by: _lock
+        self._retry_heap: list[tuple[float, int]] = []  # guarded-by: _lock
         self._jitter = random.Random(0x5EED)  # backoff jitter (full jitter)
-        self.dispatched = 0        # requests issued (a batch counts once)
-        self.duplicates_dropped = 0
-        self.reissued = 0
-        self.retried = 0
-        self.retries_delayed = 0   # retries that waited out a backoff
-        self.cancelled_dropped = 0
-        self.deadline_exhausted = 0
-        self.beat_deaths = 0
-        self.beat_requeued = 0
-        self._cancelled_rids: set[int] = set()  # await their late replies
+        self.dispatched = 0         # guarded-by: _lock
+        self.duplicates_dropped = 0  # guarded-by: _lock
+        self.reissued = 0           # guarded-by: _lock
+        self.retried = 0            # guarded-by: _lock
+        self.retries_delayed = 0    # guarded-by: _lock
+        self.cancelled_dropped = 0  # guarded-by: _lock
+        self.deadline_exhausted = 0  # guarded-by: _lock
+        self.beat_deaths = 0        # guarded-by: _lock
+        self.beat_requeued = 0      # guarded-by: _lock
+        self._cancelled_rids: set[int] = set()          # guarded-by: _lock
         self._lat_est = self.transport.cost(1 << 20)  # moving latency estimate
         self._lat_samples = 0
 
@@ -311,10 +311,10 @@ class RemoteServerPool:
         server = self.servers[sid]
         if not server.alive:
             return          # already dead through the explicit path
-        self.beat_deaths += 1
         server.alive = False
         server.inbox.put(None)   # wake it so its queue drains
         with self._lock:
+            self.beat_deaths += 1
             stranded = [r for r in self.inflight.values()
                         if r.last_sid == sid]
         for r in stranded:
@@ -326,7 +326,8 @@ class RemoteServerPool:
                 break
             r.issued_at = time.monotonic()
             r.last_sid = s.sid
-            self.beat_requeued += 1
+            with self._lock:
+                self.beat_requeued += 1
             s.submit(r)
 
     # ---------------------------------------------------------- dispatch
@@ -376,8 +377,9 @@ class RemoteServerPool:
                 # straggler duplicate — keep the two stats separate
                 self._cancelled_rids.discard(req.rid)
                 return ("dropped", None)
+            else:
+                self.duplicates_dropped += 1
         if not live:
-            self.duplicates_dropped += 1
             return ("dropped", None)
         if tag == "ok":
             # amortized PER-ENTITY latency: a k-entity batch legitimately
@@ -402,16 +404,17 @@ class RemoteServerPool:
             delay = self._jitter.uniform(0.0, cap)
         now = time.monotonic()
         if req.deadline is not None and now + delay >= req.deadline:
-            self.deadline_exhausted += 1
+            with self._lock:
+                self.deadline_exhausted += 1
             return ("failed", DeadlineExceeded(
                 f"retry budget exhausted after {req.attempt + 1} "
                 f"attempt(s): {payload}"))
         req.attempt += 1
-        self.retried += 1
         failed_sid = req.last_sid
         if delay <= 0.0:
             req.issued_at = now
             with self._lock:
+                self.retried += 1
                 self.inflight[req.rid] = req
             try:
                 server = self._pick(exclude=failed_sid)
@@ -422,8 +425,9 @@ class RemoteServerPool:
             req.last_sid = server.sid
             server.submit(req)
         else:
-            self.retries_delayed += 1
             with self._lock:
+                self.retried += 1
+                self.retries_delayed += 1
                 self.inflight[req.rid] = req
                 heapq.heappush(self._retry_heap, (now + delay, req.rid))
         return ("requeued", None)
@@ -578,6 +582,13 @@ class RemoteServerPool:
                  if self.monitor is not None else {})
         with self._lock:
             retries_pending = len(self._retry_heap)
+            counters = {"beat_deaths": self.beat_deaths,
+                        "beat_requeued": self.beat_requeued,
+                        "retried": self.retried,
+                        "retries_delayed": self.retries_delayed,
+                        "retries_pending": retries_pending,
+                        "deadline_exhausted": self.deadline_exhausted,
+                        "reissued": self.reissued}
         servers = []
         for s in self.servers:
             row = {"sid": s.sid, "alive": s.alive, "pending": s.load(),
@@ -588,13 +599,7 @@ class RemoteServerPool:
             servers.append(row)
         return {"live": self.live_count(),
                 "heartbeat": self.monitor is not None,
-                "beat_deaths": self.beat_deaths,
-                "beat_requeued": self.beat_requeued,
-                "retried": self.retried,
-                "retries_delayed": self.retries_delayed,
-                "retries_pending": retries_pending,
-                "deadline_exhausted": self.deadline_exhausted,
-                "reissued": self.reissued,
+                **counters,
                 "servers": servers}
 
     def shutdown(self, timeout: float = 5.0):

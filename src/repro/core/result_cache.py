@@ -82,18 +82,18 @@ class ResultCache:
         self.capacity_bytes = capacity_bytes
         self._lock = threading.Lock()
         self._od: collections.OrderedDict[tuple[str, str], Any] = \
-            collections.OrderedDict()
-        self._by_eid: dict[str, set[str]] = {}
-        self._epochs: dict[str, int] = {}  # bumped by invalidate()
-        self._bytes = 0
-        self.hits = 0          # full-pipeline hits
-        self.prefix_hits = 0   # partial-pipeline hits
-        self.misses = 0
-        self.puts = 0
-        self.stale_puts = 0    # refused: eid invalidated since expand
-        self.oversize_puts = 0  # refused: value alone exceeds the budget
-        self.evictions = 0
-        self.invalidations = 0
+            collections.OrderedDict()                   # guarded-by: _lock
+        self._by_eid: dict[str, set[str]] = {}          # guarded-by: _lock
+        self._epochs: dict[str, int] = {}               # guarded-by: _lock
+        self._bytes = 0                                 # guarded-by: _lock
+        self.hits = 0          # full-pipeline hits  # guarded-by: _lock
+        self.prefix_hits = 0   # partial hits        # guarded-by: _lock
+        self.misses = 0         # guarded-by: _lock
+        self.puts = 0           # guarded-by: _lock
+        self.stale_puts = 0     # guarded-by: _lock
+        self.oversize_puts = 0  # guarded-by: _lock
+        self.evictions = 0      # guarded-by: _lock
+        self.invalidations = 0  # guarded-by: _lock
 
     # -------------------------------------------------------------- reads
     def get(self, eid: str, sig: str):
@@ -136,8 +136,11 @@ class ResultCache:
     def put(self, eid: str, sig: str, value: Any, epoch: int | None = None):
         if getattr(value, "nbytes", 0) > self.capacity_bytes:
             # un-cacheable: admitting it would evict the entire cache
-            # only to evict the value itself next
-            self.oversize_puts += 1
+            # only to evict the value itself next.  put() runs
+            # concurrently on native workers and Thread_3, so even this
+            # refusal counter takes the lock — a bare += loses updates.
+            with self._lock:
+                self.oversize_puts += 1
             return
         with self._lock:
             # cheap staleness check BEFORE the array copy below — put()

@@ -153,45 +153,45 @@ class AdmissionController:
         self.tenant_default_weight = tenant_default_weight
         self.cost_aware = cost_aware
         self.cost_cap_s = cost_cap_s
-        self._tenant_used: dict[str, float] = {}      # in-flight units
-        self._tenant_reserved: dict[str, float] = {}
-        self._tenant_by_query: dict[str, str] = {}
-        self._units_by_query: dict[str, float] = {}   # in-flight units
-        self._inflight_cost = 0.0
-        self._pending_cost = 0.0
-        self._pending_cost_by_query: dict[str, float] = {}
-        self._reserved_cost_total = 0.0
-        self._reserved_cost_by_query: dict[str, float] = {}
+        self._tenant_used: dict[str, float] = {}      # guarded-by: _lock
+        self._tenant_reserved: dict[str, float] = {}  # guarded-by: _lock
+        self._tenant_by_query: dict[str, str] = {}    # guarded-by: _lock
+        self._units_by_query: dict[str, float] = {}   # guarded-by: _lock
+        self._inflight_cost = 0.0                     # guarded-by: _lock
+        self._pending_cost = 0.0                      # guarded-by: _lock
+        self._pending_cost_by_query: dict[str, float] = {}  # guarded-by: _lock
+        self._reserved_cost_total = 0.0               # guarded-by: _lock
+        self._reserved_cost_by_query: dict[str, float] = {}  # guarded-by: _lock
         self._clock = clock
         self._lock = threading.Lock()
-        self._inflight = 0
-        self._inflight_by_query: dict[str, int] = {}
+        self._inflight = 0                            # guarded-by: _lock
+        self._inflight_by_query: dict[str, int] = {}  # guarded-by: _lock
         # pending lane: heap of (-priority, seq, entity); seq keeps FIFO
         # order within a priority.  _pending_by_query is the liveness
         # ledger — a heap entry whose query has no pending count is a
         # tombstone left by drop_query and is skipped at pop time.
-        self._heap: list[tuple[int, int, Any]] = []
+        self._heap: list[tuple[int, int, Any]] = []   # guarded-by: _lock
         self._seq = itertools.count()
-        self._pending_total = 0
-        self._pending_by_query: dict[str, int] = {}
+        self._pending_total = 0                       # guarded-by: _lock
+        self._pending_by_query: dict[str, int] = {}   # guarded-by: _lock
         # pre-ingest reservations (see reserve()): under "shed" a
         # reservation holds in-flight slots, under "queue" it holds
         # pending-lane budget, so a query told "admitted" before its
         # Add barrier wrote can never be rejected afterwards
-        self._reserved_total = 0
-        self._reserved_by_query: dict[str, int] = {}
-        self._closed = False
+        self._reserved_total = 0                      # guarded-by: _lock
+        self._reserved_by_query: dict[str, int] = {}  # guarded-by: _lock
+        self._closed = False                          # guarded-by: _lock
         # completion-rate EWMA (entities/second across the whole engine)
         # — the primary input to the retry-after estimate
-        self._rate = 0.0
-        self._last_done: float | None = None
+        self._rate = 0.0                              # guarded-by: _lock
+        self._last_done: float | None = None          # guarded-by: _lock
         # lifetime counters
-        self.admitted = 0
-        self.queued = 0
-        self.shed = 0
-        self.completed = 0
-        self.dropped = 0
-        self.peak_inflight = 0
+        self.admitted = 0                             # guarded-by: _lock
+        self.queued = 0                               # guarded-by: _lock
+        self.shed = 0                                 # guarded-by: _lock
+        self.completed = 0                            # guarded-by: _lock
+        self.dropped = 0                              # guarded-by: _lock
+        self.peak_inflight = 0                        # guarded-by: _lock
         # live signal sources (bound after the loop exists)
         self._loop = None
         self._pool = None
@@ -261,8 +261,8 @@ class AdmissionController:
         (the single float read of ``_rate`` is GIL-atomic and the
         estimate is heuristic), so it is safe with or without
         ``_lock`` held."""
-        if self._rate > 0.0:
-            return 1.0 / self._rate
+        if self._rate > 0.0:  # analysis: ok(guarded-by) — GIL-atomic heuristic read
+            return 1.0 / self._rate  # analysis: ok(guarded-by) — GIL-atomic heuristic read
         if self._tracker is not None:
             est = self._tracker.mean_estimate()
             if est is not None:
@@ -368,6 +368,7 @@ class AdmissionController:
         """Cheap pre-expand fast path: the in-flight ledger is full.
         Used by the session to fail a shed query *before* expansion
         (and before an Add phase's ingest side effects)."""
+        # analysis: ok(guarded-by) — advisory fast path; admit() re-checks under _lock
         return self._inflight >= self.max_inflight
 
     def _avail_locked(self) -> int:

@@ -236,9 +236,9 @@ class OpCostTracker:
         self.default_s = default_s
         self.alpha = alpha
         self._lock = threading.Lock()
-        self._est: dict[str, dict[tuple, float]] = {
+        self._est: dict[str, dict[tuple, float]] = {          # guarded-by: _lock
             "native": {}, "batched": {}, "device": {}}
-        self._out_bytes: dict[tuple, float] = {}
+        self._out_bytes: dict[tuple, float] = {}   # guarded-by: _lock
 
     def observe(self, op, seconds: float, kind: str = "native",
                 out_bytes: int | None = None):
@@ -302,8 +302,8 @@ class LoadLedger:
         self._drain_rate = drain_rate
         self._clock = clock
         self._lock = threading.Lock()
-        self._backlog = 0.0
-        self._last = clock()
+        self._backlog = 0.0       # guarded-by: _lock
+        self._last = clock()      # guarded-by: _lock
 
     def _decay_locked(self):
         now = self._clock()
@@ -461,8 +461,8 @@ class StaticRouter:
     def __init__(self, backend: str = NATIVE):
         self.backend = backend
         self._lock = threading.Lock()
-        self.chains_routed = 0
-        self.ops_routed = 0
+        self.chains_routed = 0    # guarded-by: _lock
+        self.ops_routed = 0       # guarded-by: _lock
 
     def route(self, ops, start: int = 0, payload_bytes: int = 0) -> list:
         with self._lock:
@@ -501,10 +501,10 @@ class BackendRouter:
         # still drains away from a sick backend.
         self.health = health
         self._lock = threading.Lock()
-        self.placements = {b.name: 0 for b in backends}
-        self.handoffs = 0
-        self.segments = 0
-        self.chains_routed = 0
+        self.placements = {b.name: 0 for b in backends}   # guarded-by: _lock
+        self.handoffs = 0         # guarded-by: _lock
+        self.segments = 0         # guarded-by: _lock
+        self.chains_routed = 0    # guarded-by: _lock
 
     # ----------------------------------------------------------- costing
     def cost(self, op, backend: str, payload_bytes: int = 0) -> float:

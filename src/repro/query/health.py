@@ -61,14 +61,14 @@ class CircuitBreaker:
         self.can_open = can_open
         self._clock = clock
         self._lock = threading.Lock()
-        self._state = CLOSED
-        self._err = 0.0              # error-rate EWMA in [0, 1]
-        self._lat: float | None = None   # latency EWMA (seconds)
-        self._samples = 0
-        self._opened_at = 0.0
-        self._probes = 0             # placements admitted this half-open round
-        self.trips = 0
-        self.recoveries = 0
+        self._state = CLOSED             # guarded-by: _lock
+        self._err = 0.0                  # error EWMA   # guarded-by: _lock
+        self._lat: float | None = None   # latency EWMA  # guarded-by: _lock
+        self._samples = 0                # guarded-by: _lock
+        self._opened_at = 0.0            # guarded-by: _lock
+        self._probes = 0                 # half-open round  # guarded-by: _lock
+        self.trips = 0                   # guarded-by: _lock
+        self.recoveries = 0              # guarded-by: _lock
 
     # ------------------------------------------------------- transitions
     def _tick_locked(self):
@@ -168,7 +168,11 @@ class HealthRegistry:
         self._never_open = tuple(never_open)
         self._clock = clock
         self._breaker_kwargs = dict(breaker_kwargs)
-        self._breakers = {}
+        # register()/remove() run on user threads (cluster shard
+        # join/leave) while router and gather threads read — a bare
+        # dict would let stats() iterate mid-insert
+        self._reg_lock = threading.Lock()
+        self._breakers = {}              # guarded-by: _reg_lock
         for n in names:
             self.register(n)
 
@@ -178,43 +182,52 @@ class HealthRegistry:
         parameters so every member runs the same health policy.
         Idempotent: an existing breaker (and its accumulated EWMAs) is
         kept."""
-        b = self._breakers.get(name)
-        if b is None:
-            b = CircuitBreaker(name, can_open=name not in self._never_open,
-                               clock=self._clock, **self._breaker_kwargs)
-            self._breakers[name] = b
-        return b
+        with self._reg_lock:
+            b = self._breakers.get(name)
+            if b is None:
+                b = CircuitBreaker(name,
+                                   can_open=name not in self._never_open,
+                                   clock=self._clock,
+                                   **self._breaker_kwargs)
+                self._breakers[name] = b
+            return b
 
     def remove(self, name: str):
         """Forget a departed backend's breaker (cluster shard leave);
         unknown names answer neutrally again afterwards."""
-        self._breakers.pop(name, None)
+        with self._reg_lock:
+            self._breakers.pop(name, None)
 
     def get(self, name: str) -> CircuitBreaker | None:
-        return self._breakers.get(name)
+        with self._reg_lock:
+            return self._breakers.get(name)
 
     def record_success(self, name: str, latency_s: float | None = None):
-        b = self._breakers.get(name)
+        b = self.get(name)
         if b is not None:
             b.record_success(latency_s)
 
     def record_failure(self, name: str):
-        b = self._breakers.get(name)
+        b = self.get(name)
         if b is not None:
             b.record_failure()
 
     def routable(self, name: str) -> bool:
-        b = self._breakers.get(name)
+        b = self.get(name)
         return True if b is None else b.routable()
 
     def note_probe(self, name: str):
-        b = self._breakers.get(name)
+        b = self.get(name)
         if b is not None:
             b.note_probe()
 
     def penalty(self, name: str) -> float:
-        b = self._breakers.get(name)
+        b = self.get(name)
         return 1.0 if b is None else b.penalty()
 
     def stats(self) -> dict:
-        return {n: b.stats() for n, b in self._breakers.items()}
+        # snapshot under the registry lock; per-breaker stats() takes
+        # each breaker's own lock outside it (no nested acquisition)
+        with self._reg_lock:
+            members = sorted(self._breakers.items())
+        return {n: b.stats() for n, b in members}

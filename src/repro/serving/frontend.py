@@ -79,9 +79,9 @@ class _Conn:
         self.peer = peer
         self._out: queue.Queue = queue.Queue()
         self._lock = threading.Lock()
-        self._futures: dict[str, Any] = {}
-        self._gates: dict[str, list] = {}
-        self._closed = False
+        self._futures: dict[str, Any] = {}     # guarded-by: _lock
+        self._gates: dict[str, list] = {}      # guarded-by: _lock
+        self._closed = False                   # guarded-by: _lock
         self._writer = threading.Thread(
             target=self._write_loop, name=f"wire-writer-{peer}",
             daemon=True)
@@ -308,8 +308,8 @@ class WireFrontend:
         self._sock.listen(backlog)
         self.address: tuple[str, int] = self._sock.getsockname()
         self._lock = threading.Lock()
-        self._conns: set[_Conn] = set()
-        self._closed = False
+        self._conns: set[_Conn] = set()        # guarded-by: _lock
+        self._closed = False                   # guarded-by: _lock
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name="wire-accept", daemon=True)
 
@@ -348,6 +348,13 @@ class WireFrontend:
                 return
             self._closed = True
             conns = list(self._conns)
+        try:
+            # close() alone does not wake a thread blocked in accept()
+            # on Linux — shutdown the listener first so the accept loop
+            # exits instead of leaking past the join below
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
         try:
             self._sock.close()
         except OSError:
@@ -439,10 +446,14 @@ class WireClient:
         self._sock.settimeout(None)
         self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         self._lock = threading.Lock()
-        self._futures: dict[str, _WireFuture] = {}
+        # writes get their own lock: sendall() can block indefinitely on
+        # a full send buffer (peer not reading), and holding the state
+        # lock across it would wedge close()/drop() behind a stalled peer
+        self._io_lock = threading.Lock()
+        self._futures: dict[str, _WireFuture] = {}   # guarded-by: _lock
         self._orphans: queue.Queue = queue.Queue()   # pong / rid-less error
-        self._rid_seq = 0
-        self._closed = False
+        self._rid_seq = 0                            # guarded-by: _lock
+        self._closed = False                         # guarded-by: _lock
         self.disconnected = threading.Event()
         self._reader = threading.Thread(target=self._read_loop,
                                         name="wire-client-reader",
@@ -455,6 +466,9 @@ class WireClient:
         with self._lock:
             if self._closed:
                 raise OSError("wire client is closed")
+        with self._io_lock:
+            # _io_lock guards no state — it only serializes writers
+            # analysis: ok(blocking-under-lock) — IO-only lock, held for nothing else
             self._sock.sendall(frame)
 
     def _read_loop(self):
@@ -525,7 +539,9 @@ class WireClient:
     def send_raw(self, data: bytes):
         """Ship raw bytes down the socket — the malformed-frame
         conformance tests poke the server's grammar with this."""
-        with self._lock:
+        with self._io_lock:
+            # _io_lock guards no state — it only serializes writers
+            # analysis: ok(blocking-under-lock) — IO-only lock, held for nothing else
             self._sock.sendall(data)
 
     def next_orphan(self, timeout: float = 5.0) -> tuple[str, dict]:

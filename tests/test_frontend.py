@@ -696,3 +696,22 @@ def test_tenant_quota_end_to_end_over_engine():
         assert st["tenants"]["gold"]["used_units"] == 0.0
     finally:
         eng.shutdown()
+
+
+def test_frontend_close_joins_accept_thread():
+    """Regression: close() alone did not wake the thread blocked in
+    accept() (Linux close-vs-accept semantics), so every frontend
+    teardown burned the full join timeout and leaked the accept thread.
+    Shutting the listener down first must make close prompt and the
+    thread joined."""
+    eng = VDMSAsyncEngine(**DET)
+    try:
+        front = _serve(eng)
+        time.sleep(0.05)          # let the accept loop block
+        t0 = time.monotonic()
+        front.close()
+        took = time.monotonic() - t0
+        assert not front._accept_thread.is_alive()
+        assert took < 2.0, f"close() took {took:.1f}s (join timeout burn)"
+    finally:
+        eng.shutdown()
